@@ -1,0 +1,37 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def art_path(name: str) -> str:
+    return os.path.abspath(os.path.join(ART, name))
+
+
+def load_artifact(name: str):
+    p = art_path(name)
+    if os.path.exists(p):
+        with open(p) as f:
+            return json.load(f)
+    return None
+
+
+def timeit(fn, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds (paper: average of runs after one warm-up)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.3f},{derived}")

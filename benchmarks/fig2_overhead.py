@@ -1,0 +1,48 @@
+"""Paper Fig. 2: relative execution time of the two prediction tasks vs the
+full SpGEMM library run, on the matrix-square benchmark.
+
+Our 'library' is the vectorized host SpGEMM (oracle.spgemm — the analogue of
+BRMerge-Precise in this reproduction); the two tasks are computing the FLOP
+per output row (Algorithm 1) and predicting Z2* (Algorithm 2).
+Paper result: computing FLOP 1.68% (≤4.12%), predicting Z2* 0.72% (≤1.89%).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import oracle
+from repro.sparse.suite import SUITE, get_matrix
+from .common import timeit, emit
+
+# matrix-square benchmark on a representative CR spread (full 25 is slow on
+# the shared CI core; families cover the Fig. 2 x-axis)
+BENCH = ["er_100k_d4", "pl_80k_d6", "rmat_60k", "band_40k_d24",
+         "fem_24k_d64", "femblk_20k"]
+
+
+def run(names=None):
+    names = names or BENCH
+    print("# Fig. 2 analogue: prediction overhead vs full SpGEMM "
+          "(matrix-square)")
+    print("matrix,flop_pct,predict_pct,spgemm_s")
+    ratios_f, ratios_p = [], []
+    for name in names:
+        a = get_matrix(name)
+        floprc, total_flop = oracle.flop_per_row(a, a)
+        rows = oracle.sample_rows(a.nrows, seed=0)
+
+        t_flop = timeit(lambda: oracle.flop_per_row(a, a))
+        t_pred = timeit(lambda: oracle.exact_sampled_nnz(a, a, rows))
+        t_full = timeit(lambda: oracle.spgemm(a, a), warmup=0, iters=1)
+        rf, rp = t_flop / t_full * 100, t_pred / t_full * 100
+        ratios_f.append(rf)
+        ratios_p.append(rp)
+        print(f"{name},{rf:.2f},{rp:.2f},{t_full:.3f}")
+    emit("fig2.mean_flop_pct", 0.0, f"{np.mean(ratios_f):.2f}")
+    emit("fig2.max_flop_pct", 0.0, f"{np.max(ratios_f):.2f}")
+    emit("fig2.mean_predict_pct", 0.0, f"{np.mean(ratios_p):.2f}")
+    emit("fig2.max_predict_pct", 0.0, f"{np.max(ratios_p):.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Pallas kernel microbench (interpret mode on CPU → correctness-path timing;
+real-TPU timing is the deployment path).  Reports kernel vs jnp-ref us/call
+so kernel-path regressions are visible in CI."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse import random as sprand
+from repro.core import csr, predictor
+from repro.kernels import ops, ref
+from .common import timeit, emit
+
+
+def run():
+    a = sprand.banded(2000, 2000, 12, 16, seed=1)
+    b = sprand.erdos_renyi(2000, 2000, 6, seed=2)
+    ad, bd = csr.to_device(a), csr.to_device(b)
+    mda, mdb = int(a.row_nnz.max()), int(b.row_nnz.max())
+    rows = predictor.draw_sample_rows(jax.random.PRNGKey(0), 2000, 6)
+
+    t = timeit(lambda: jax.block_until_ready(
+        ops.flop_per_row(ad, bd, max_deg_a=mda)))
+    emit("kernel.flop_per_row.us", t * 1e6, "interpret")
+    t = timeit(lambda: jax.block_until_ready(
+        ref.flop_per_row_ref(ad.rpt, ad.col, jnp.diff(bd.rpt))))
+    emit("kernel.flop_per_row_ref.us", t * 1e6, "jnp")
+
+    t = timeit(lambda: jax.block_until_ready(
+        ops.sampled_symbolic(ad, bd, rows, mda, mdb)[0]))
+    emit("kernel.sampled_symbolic.us", t * 1e6, "interpret")
+    t = timeit(lambda: jax.block_until_ready(
+        ref.sampled_symbolic_ref(ad, bd, rows, mda, mdb)[0]))
+    emit("kernel.sampled_symbolic_ref.us", t * 1e6, "jnp")
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    t = timeit(lambda: jax.block_until_ready(
+        ops.flash_attention(q, k, v, block_q=64, block_k=64)))
+    emit("kernel.flash_attention.us", t * 1e6, "interpret")
+    t = timeit(lambda: jax.block_until_ready(ref.attention_ref(q, k, v)))
+    emit("kernel.flash_attention_ref.us", t * 1e6, "jnp")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Roofline report over the dry-run artifacts (§Roofline deliverable).
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and emits the
+per-(arch × shape × mesh) three-term table plus dominant bottlenecks."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import art_path, emit
+
+
+def run():
+    files = sorted(glob.glob(os.path.join(art_path("dryrun"), "*.json")))
+    if not files:
+        print("# no dryrun artifacts — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun")
+        emit("roofline.cells", 0.0, "0")
+        return
+    print("# roofline per cell (seconds per step; v5e constants)")
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,bottleneck,"
+          "useful_flops_ratio,temp_bytes_per_dev")
+    bnecks = {"compute": 0, "memory": 0, "collective": 0}
+    for f in files:
+        r = json.load(open(f))
+        rl = r["roofline"]
+        bnecks[rl["bottleneck"]] += 1
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{rl['compute_s']:.5f},"
+              f"{rl['memory_s']:.5f},{rl['collective_s']:.5f},"
+              f"{rl['bottleneck']},{rl['useful_flops_ratio']:.3f},"
+              f"{r['memory_analysis'].get('temp_size', 0)}")
+    emit("roofline.cells", 0.0, str(len(files)))
+    for k, v in bnecks.items():
+        emit(f"roofline.bottleneck.{k}", 0.0, str(v))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus table sections as
+comment/CSV blocks).  Usage: PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (table2_suite, table3_accuracy, fig2_overhead,
+                   kernels_bench, roofline_bench, moe_capacity_bench,
+                   partition_bench)
+    sections = [
+        ("table2 (suite stats)", table2_suite.run),
+        ("table3 (625-case accuracy)", table3_accuracy.run),
+        ("fig2 (prediction overhead)", fig2_overhead.run),
+        ("kernels (pallas microbench)", kernels_bench.run),
+        ("roofline (dry-run cells)", roofline_bench.run),
+        ("moe capacity (beyond-paper)", moe_capacity_bench.run),
+        ("partition (load balance)", partition_bench.run),
+    ]
+    failed = 0
+    for name, fn in sections:
+        print(f"\n## {name}")
+        try:
+            fn()
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

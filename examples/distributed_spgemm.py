@@ -1,0 +1,44 @@
+"""Distributed SpGEMM across a device mesh, load-balanced by the paper's
+predicted output structure (DESIGN §3: thread-level binning → shard-level
+partitioning).
+
+Uses 4 placeholder devices (works on any machine); the same code drives the
+`data` axis of the production mesh.
+
+Run:  PYTHONPATH=src python examples/distributed_spgemm.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+import numpy as np
+
+from repro.sparse import random as sprand
+from repro.sparse.formats import spgemm_dense_oracle
+from repro.core import distributed, oracle, partition
+
+# a matrix with strongly varying row compression — the case where
+# FLOP-balanced sharding mis-loads devices
+a = sprand.banded(2000, 2000, 36, 28, seed=1)      # heavy, high-CR rows
+b = sprand.banded(2000, 2000, 12, 40, seed=2)
+
+mesh = jax.make_mesh((4,), ("data",))
+plan = distributed.plan_distributed(a, b, num_shards=4)
+flopr, _ = oracle.flop_per_row(a, b)
+
+print(f"predicted NNZ(C) = {plan.predicted_nnz:,.0f}; "
+      f"per-row capacity {plan.row_capacity} "
+      f"(upper bound {int(flopr.max())})")
+print(f"predicted-NNZ-balanced imbalance: {plan.partition.imbalance:.3f}")
+p_flop = partition.balanced_contiguous(flopr, 4)
+nnzr, z = oracle.exact_structure(a, b)
+w = np.add.reduceat(nnzr, p_flop.bounds[:-1])
+print(f"FLOP-balanced imbalance on true work: {w.max()/w.mean():.3f}")
+
+col, val, row_nnz, ofl = distributed.distributed_spgemm(a, b, mesh, plan)
+c = distributed.reassemble(plan, col, val, np.asarray(row_nnz), b.ncols)
+err = np.abs(c.to_dense() - spgemm_dense_oracle(a, b)).max()
+print(f"4-shard numeric phase: nnz={c.nnz:,} (exact {z:,}), "
+      f"overflow={int(np.asarray(ofl).sum())}, max err={err:.2e}")
+assert err < 1e-3 and c.nnz == z
+print("OK — sharded SpGEMM exact, balanced, within predicted buffers.")

@@ -1,0 +1,61 @@
+"""Beyond-paper example: sizing MoE dispatch with the paper's sampling ideas
+(DESIGN §4), two levels:
+
+  1. block-sparse buffer TOTAL via the sampled compression ratio — the
+     paper's eq. 4 verbatim on the (group × expert) dispatch structure;
+  2. per-expert token-slot capacity via sampled-group load measurement —
+     replacing the blind ``capacity_factor`` guess.
+
+Demonstrated on a SKEWED router (the realistic failure case for fixed
+capacity factors), verifying near-zero drops at the predicted capacity.
+
+Run:  PYTHONPATH=src python examples/moe_capacity_planning.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.core import moe_capacity
+from repro.models import moe as moe_mod
+from repro.models.schema import init_params
+
+cfg = get_smoke_config("deepseek-v3-671b")
+E, K = cfg.moe_num_experts, cfg.moe_top_k
+B, S = 32, 512
+
+params = init_params(moe_mod.moe_schema(cfg), jax.random.PRNGKey(0),
+                     jnp.float32)
+# skew the router: two experts get a strong prior (hot-expert pathology)
+router = np.array(params["router"])          # writable copy
+router[:, :2] += 0.35
+params["router"] = jnp.asarray(router)
+
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+logits = np.asarray((x @ params["router"]).astype(jnp.float32))
+ids = np.argsort(-logits, axis=-1)[..., :K].reshape(B * S, K)
+
+# ---- level 1: block-sparse buffer total (paper eq. 4 on the dispatch) ----
+plan = moe_capacity.predict_dispatch_capacity(ids, E, group_size=64, seed=0,
+                                              sample_fraction=0.05)
+exact = moe_capacity.exact_dispatch_blocks(ids, group_size=64)
+print(f"experts={E} top-{K} tokens={B*S} (skewed router)")
+print(f"blocks: exact={exact:,} predicted={plan.predicted_blocks:,.0f} "
+      f"({(plan.predicted_blocks-exact)/exact*100:+.2f}%)  "
+      f"CR*={plan.compression_ratio:.2f}")
+
+# ---- level 2: per-expert slot capacity from sampled groups ----
+pred_cap = moe_capacity.predict_group_capacity(ids, E, group_size=S,
+                                               sample_fraction=0.2, seed=1)
+guess_cap = moe_mod.default_capacity(cfg, S)   # blind capacity_factor guess
+y1, aux1 = moe_mod.apply_moe(params, cfg, x, capacity=guess_cap)
+y2, aux2 = moe_mod.apply_moe(params, cfg, x, capacity=pred_cap)
+print(f"capacity: blind cf-guess={guess_cap} → dropped "
+      f"{float(aux1.dropped_fraction)*100:.2f}% of assignments")
+print(f"capacity: sampled-predicted={pred_cap} → dropped "
+      f"{float(aux2.dropped_fraction)*100:.2f}%")
+print(f"true upper bound (never-drop guess) would be {S*K} slots/expert "
+      f"({S*K//pred_cap}× the predicted size)")
+assert float(aux2.dropped_fraction) < 0.01
+print("OK — predicted capacity holds the skewed routing with <1% drops.")

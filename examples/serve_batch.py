@@ -1,0 +1,33 @@
+"""Batched serving example: prefill a batch of prompts into KV caches, then
+decode tokens for all sequences in lock-step (deliverable (b)).
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.models import transformer as T
+from repro.models.schema import init_params
+from repro.serve import engine
+
+cfg = get_smoke_config("qwen2.5-32b")
+params = init_params(T.build_schema(cfg, 1), jax.random.PRNGKey(0),
+                     jnp.float32)
+
+rng = np.random.default_rng(0)
+B, P, N = 4, 8, 16
+prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
+
+sess = engine.start_session(cfg, params, batch=B, max_len=P + N + 1)
+toks = engine.generate(sess, prompts, num_tokens=N, temperature=0.0)
+print("prompts:\n", np.asarray(prompts))
+print("generated:\n", np.asarray(toks))
+assert toks.shape == (B, N)
+
+# sampled decoding from the same prompts
+sess2 = engine.start_session(cfg, params, batch=B, max_len=P + N + 1)
+toks2 = engine.generate(sess2, prompts, num_tokens=N, temperature=0.8, seed=1)
+print("sampled:\n", np.asarray(toks2))
+print(f"OK — decoded {B}×{N} tokens with a {P}-token prefill cache.")

@@ -1,0 +1,29 @@
+"""End-to-end driver: train a ~100M-parameter model for a few hundred steps
+on the synthetic pipeline, with checkpoints and restart (deliverable (b)).
+
+The config is the xlstm-125m assigned architecture at full size (0.19B
+params incl. untied head) — or pass --small for a CI-scale run.
+
+Run:  PYTHONPATH=src python examples/train_100m.py --steps 300
+      PYTHONPATH=src python examples/train_100m.py --small --steps 60
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]]  # delegate to the launcher with explicit args below
+from repro.launch.train import main as train_main  # noqa: E402
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_100m")
+    args = ap.parse_args()
+    argv = ["--arch", "xlstm-125m", "--steps", str(args.steps),
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+            "--batch", "4", "--seq", "256", "--lr", "1e-3"]
+    if args.small:
+        argv += ["--smoke", "--batch", "8", "--seq", "128"]
+    first, last = train_main(argv)
+    assert last < first, "loss must decrease"
+    print("OK — loss decreased; checkpoints in", args.ckpt_dir)

@@ -1,0 +1,74 @@
+"""Device-side (JAX) CSR with static shapes.
+
+XLA requires static shapes, so the device CSR is *capacity-padded*: ``col`` /
+``val`` have length ``cap >= nnz``; entries past ``nnz`` are padding (col
+sentinel, val 0).  ``nnz`` itself stays a traced scalar so one compiled
+program serves any matrix that fits the capacity — exactly the regime the
+paper's predictor exists for (size the capacity before you compute).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.formats import CSR
+
+# Sentinel for padded column slots: larger than any real column index so that
+# sorted buffers push padding to the tail and adjacent-unique never counts it.
+COL_SENTINEL = np.int32(np.iinfo(np.int32).max)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CSRDevice:
+    """Padded CSR on device.  ``shape``/capacity are static (aux) data."""
+
+    rpt: jax.Array  # int32 (M+1,)
+    col: jax.Array  # int32 (cap,), padded with COL_SENTINEL
+    val: jax.Array  # float32 (cap,), padded with 0
+    shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def nrows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def ncols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self.col.shape[0]
+
+    @property
+    def nnz(self) -> jax.Array:
+        return self.rpt[-1]
+
+    @property
+    def row_nnz(self) -> jax.Array:
+        return jnp.diff(self.rpt)
+
+
+def to_device(host: CSR, capacity: int | None = None) -> CSRDevice:
+    cap = int(capacity if capacity is not None else host.nnz)
+    assert cap >= host.nnz, (cap, host.nnz)
+    col = np.full(cap, COL_SENTINEL, dtype=np.int32)
+    val = np.zeros(cap, dtype=np.float32)
+    col[: host.nnz] = host.col
+    val[: host.nnz] = host.val
+    return CSRDevice(
+        rpt=jnp.asarray(host.rpt, dtype=jnp.int32),
+        col=jnp.asarray(col),
+        val=jnp.asarray(val),
+        shape=host.shape,
+    )
+
+
+def to_host(dev: CSRDevice) -> CSR:
+    rpt = np.asarray(dev.rpt, dtype=np.int64)
+    nnz = int(rpt[-1])
+    return CSR(rpt=rpt, col=np.asarray(dev.col[:nnz], dtype=np.int32),
+               val=np.asarray(dev.val[:nnz], dtype=np.float32), shape=dev.shape)

@@ -1,0 +1,32 @@
+"""Algorithm 1 on device: FLOP per output row (the upper-bound method), in JAX.
+
+floprC[i] = sum_{j in [A.rpt[i], A.rpt[i+1])} ( B.rpt[A.col[j]+1] - B.rpt[A.col[j]] )
+
+The nonzero→row map is recovered with a searchsorted over A.rpt (O(cap log M),
+fully vectorized), then a scatter-add builds floprC.  This is also the ref
+oracle for the Pallas ``flop_per_row`` kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .csr import CSRDevice
+
+
+def flop_per_row(a: CSRDevice, b: CSRDevice) -> tuple[jax.Array, jax.Array]:
+    """Returns (floprC int32 (M,), total_flop int64-ish int32 scalar)."""
+    assert a.ncols == b.nrows, (a.shape, b.shape)
+    cap = a.capacity
+    rownnz_b = jnp.diff(b.rpt)  # (K,)
+    pos = jnp.arange(cap, dtype=jnp.int32)
+    valid = pos < a.nnz
+    safe_col = jnp.where(valid, a.col, 0).astype(jnp.int32)
+    contrib = jnp.where(valid, rownnz_b[safe_col], 0)
+    # row of each nonzero: searchsorted right on rpt, minus one
+    row_of_nnz = jnp.searchsorted(a.rpt, pos, side="right").astype(jnp.int32) - 1
+    row_of_nnz = jnp.clip(row_of_nnz, 0, a.nrows - 1)
+    floprc = jnp.zeros(a.nrows, dtype=jnp.int32).at[row_of_nnz].add(
+        contrib, mode="drop")
+    # int32 total: fine below 2^31 products; callers at larger scale chunk rows.
+    return floprc, jnp.sum(floprc)

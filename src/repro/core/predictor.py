@@ -1,0 +1,142 @@
+"""The paper's sampled-compression-ratio predictor, on device (JAX).
+
+This is the TPU-native adaptation of Algorithm 2 (see DESIGN.md §3): the
+per-thread hash table with linear probing is replaced by a
+*gather → sort → adjacent-unique* reduction with fully static shapes:
+
+  for each of S sampled rows of A:
+      gather ≤ DA column indices of A's row            (DA = max row degree A)
+      for each, gather ≤ DB column indices of B's row   (DB = max row degree B)
+      → (S, DA*DB) buffer, padding = COL_SENTINEL
+      sort along the last axis; count strict ascents among valid entries
+  z* = Σ distinct counts;  f* = Σ valid counts
+  r* = f*/z*;  Z2* = F/r*;  nnzr*(C) = floprC / r*        (paper eq. 4)
+
+The same buffers drive the reference design  Z1* = z*/p  (paper eq. 2).
+``repro.kernels.spgemm_symbolic`` is the Pallas version of the inner loop;
+this module is its jnp oracle and the public API.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .csr import CSRDevice, COL_SENTINEL
+from .flop import flop_per_row
+
+SAMPLE_FRACTION = 0.003
+SAMPLE_CAP = 300
+
+
+class PredictionDev(NamedTuple):
+    nnz_total: jax.Array        # predicted NNZ(C)
+    structure: jax.Array        # predicted nnz per output row (float32, (M,))
+    compression_ratio: jax.Array
+    sampled_flop: jax.Array
+    sampled_nnz: jax.Array
+    total_flop: jax.Array
+
+
+def static_sample_num(m: int, fraction: float = SAMPLE_FRACTION, cap: int = SAMPLE_CAP) -> int:
+    """Paper Algorithm 2 line 1, resolved statically from the row count."""
+    return max(1, min(int(fraction * m), cap))
+
+
+def draw_sample_rows(key: jax.Array, m: int, sample_num: int) -> jax.Array:
+    """rid = M * rand[r]  (with replacement, as in the paper)."""
+    rand = jax.random.uniform(key, (sample_num,))
+    return jnp.clip((m * rand).astype(jnp.int32), 0, m - 1)
+
+
+def gather_sampled_products(a: CSRDevice, b: CSRDevice, rows: jax.Array,
+                            max_deg_a: int, max_deg_b: int) -> tuple[jax.Array, jax.Array]:
+    """Expand the sampled rows' intermediate-product columns into a static buffer.
+
+    Returns (cols (S, DA*DB) int32 with COL_SENTINEL padding, valid mask).
+    """
+    s = rows.shape[0]
+    deg_a = (a.rpt[rows + 1] - a.rpt[rows]).astype(jnp.int32)           # (S,)
+    ia = jnp.arange(max_deg_a, dtype=jnp.int32)
+    idx_a = a.rpt[rows][:, None] + ia[None, :]                           # (S, DA)
+    valid_a = ia[None, :] < deg_a[:, None]
+    ks = jnp.where(valid_a, a.col[jnp.clip(idx_a, 0, a.capacity - 1)], 0)
+
+    rownnz_b = jnp.diff(b.rpt)
+    deg_b = jnp.where(valid_a, rownnz_b[ks], 0)                          # (S, DA)
+    ib = jnp.arange(max_deg_b, dtype=jnp.int32)
+    idx_b = b.rpt[ks][:, :, None] + ib[None, None, :]                    # (S, DA, DB)
+    valid_b = valid_a[:, :, None] & (ib[None, None, :] < deg_b[:, :, None])
+    cols = jnp.where(valid_b, b.col[jnp.clip(idx_b, 0, b.capacity - 1)], COL_SENTINEL)
+    return cols.reshape(s, max_deg_a * max_deg_b), valid_b.reshape(s, max_deg_a * max_deg_b)
+
+
+def count_distinct_sorted(cols: jax.Array) -> jax.Array:
+    """Sort rows and count distinct non-sentinel entries per row."""
+    srt = jnp.sort(cols, axis=-1)
+    first = (srt[:, :1] != COL_SENTINEL).astype(jnp.int32)
+    ascents = ((srt[:, 1:] != srt[:, :-1]) & (srt[:, 1:] != COL_SENTINEL)).astype(jnp.int32)
+    return first[:, 0] + ascents.sum(axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("max_deg_a", "max_deg_b", "use_kernel"))
+def proposed_predict(a: CSRDevice, b: CSRDevice, rows: jax.Array,
+                     max_deg_a: int, max_deg_b: int, use_kernel: bool = False) -> PredictionDev:
+    """THE PAPER'S METHOD (eq. 4) on device.  ``rows`` from draw_sample_rows."""
+    floprc, total_flop = flop_per_row(a, b)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        z_star, f_star = kops.sampled_symbolic(a, b, rows, max_deg_a, max_deg_b)
+    else:
+        cols, valid = gather_sampled_products(a, b, rows, max_deg_a, max_deg_b)
+        z_star = count_distinct_sorted(cols).sum()
+        f_star = valid.sum()
+    r_star = f_star.astype(jnp.float32) / jnp.maximum(z_star, 1).astype(jnp.float32)
+    z2 = total_flop.astype(jnp.float32) / r_star
+    return PredictionDev(z2, floprc.astype(jnp.float32) / r_star, r_star,
+                         f_star, z_star, total_flop)
+
+
+@functools.partial(jax.jit, static_argnames=("max_deg_a", "max_deg_b"))
+def reference_predict(a: CSRDevice, b: CSRDevice, rows: jax.Array,
+                      max_deg_a: int, max_deg_b: int) -> PredictionDev:
+    """Reference design (eq. 2): Z1* = z*/p."""
+    floprc, total_flop = flop_per_row(a, b)
+    cols, valid = gather_sampled_products(a, b, rows, max_deg_a, max_deg_b)
+    z_star = count_distinct_sorted(cols).sum()
+    f_star = valid.sum()
+    p = rows.shape[0] / a.nrows
+    z1 = z_star.astype(jnp.float32) / p
+    cr = total_flop.astype(jnp.float32) / jnp.maximum(z1, 1.0)
+    return PredictionDev(z1, floprc.astype(jnp.float32) / cr, cr, f_star, z_star, total_flop)
+
+
+# --------------------------------------------------------------------------- #
+# Allocation planning: prediction → static buffer capacities (DESIGN.md §3).
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class AllocationPlan:
+    """Static capacities for the numeric phase, derived from a prediction."""
+    row_capacity: int       # per-row output slots (padded uniform rows)
+    total_capacity: int     # total output slots if using compacted layout
+    safety: float
+
+    @staticmethod
+    def from_prediction(pred_structure, flopr, safety: float = 1.2,
+                        align: int = 8) -> "AllocationPlan":
+        import numpy as np
+        ps = np.asarray(pred_structure, dtype=np.float64)
+        fl = np.asarray(flopr, dtype=np.float64)
+        # Never exceed the per-row upper bound; round to ``align`` lanes.
+        per_row = np.minimum(np.ceil(ps * safety), fl)
+        cap = int(per_row.max()) if per_row.size else 0
+        cap = max(align, ((cap + align - 1) // align) * align)
+        # alignment must never push past the upper bound (flopr is always safe)
+        ub = int(fl.max()) if fl.size else cap
+        cap = min(cap, max(ub, align))
+        total = int(per_row.sum())
+        total = max(align, ((total + align - 1) // align) * align)
+        return AllocationPlan(cap, total, safety)

@@ -1,0 +1,108 @@
+"""Numeric SpGEMM on device (JAX), allocated from the paper's prediction.
+
+Flow (the paper's motivating use-case, Section I):
+  1. ``flop_per_row``          — upper bound / load-balance info (Algorithm 1)
+  2. ``proposed_predict``      — sampled-CR output-structure prediction (eq. 4)
+  3. ``AllocationPlan``        — static output capacities from the prediction
+  4. ``spgemm``  (this module) — row-wise numeric phase writing into the
+                                  predicted-size buffers, overflow-reported.
+
+The numeric accumulation mirrors the symbolic TPU adaptation: expand products
+into a static (rows, DA*DB) buffer, sort by column carrying values, detect
+segment boundaries, scatter-add into per-row slots.  Overflow (a row whose
+true nnz exceeds the predicted capacity) is counted and returned so callers
+can re-run with a bumped plan — the compiled-program analogue of realloc.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .csr import CSRDevice, COL_SENTINEL
+
+
+class SpGEMMOut(NamedTuple):
+    col: jax.Array       # (M, row_capacity) int32, COL_SENTINEL padded
+    val: jax.Array       # (M, row_capacity) float32
+    row_nnz: jax.Array   # (M,) int32 — true nnz per row (may exceed capacity)
+    overflow: jax.Array  # scalar int32 — total entries dropped for capacity
+
+
+def gather_products(a: CSRDevice, b: CSRDevice, rows: jax.Array,
+                    max_deg_a: int, max_deg_b: int):
+    """Columns AND value-products of all intermediate products of ``rows``."""
+    deg_a = (a.rpt[rows + 1] - a.rpt[rows]).astype(jnp.int32)
+    ia = jnp.arange(max_deg_a, dtype=jnp.int32)
+    idx_a = jnp.clip(a.rpt[rows][:, None] + ia[None, :], 0, a.capacity - 1)
+    valid_a = ia[None, :] < deg_a[:, None]
+    ks = jnp.where(valid_a, a.col[idx_a], 0)
+    av = jnp.where(valid_a, a.val[idx_a], 0.0)
+
+    rownnz_b = jnp.diff(b.rpt)
+    deg_b = jnp.where(valid_a, rownnz_b[ks], 0)
+    ib = jnp.arange(max_deg_b, dtype=jnp.int32)
+    idx_b = jnp.clip(b.rpt[ks][:, :, None] + ib[None, None, :], 0, b.capacity - 1)
+    valid = valid_a[:, :, None] & (ib[None, None, :] < deg_b[:, :, None])
+    cols = jnp.where(valid, b.col[idx_b], COL_SENTINEL)
+    vals = jnp.where(valid, av[:, :, None] * b.val[idx_b], 0.0)
+    s = rows.shape[0]
+    f = max_deg_a * max_deg_b
+    return cols.reshape(s, f), vals.reshape(s, f), valid.reshape(s, f)
+
+
+def _accumulate_block(cols, vals, row_capacity: int):
+    """Sort-merge accumulation for one block of rows."""
+    order = jnp.argsort(cols, axis=-1)
+    c_s = jnp.take_along_axis(cols, order, axis=-1)
+    v_s = jnp.take_along_axis(vals, order, axis=-1)
+    valid = c_s != COL_SENTINEL
+    newseg = jnp.concatenate(
+        [valid[:, :1],
+         (c_s[:, 1:] != c_s[:, :-1]) & valid[:, 1:]], axis=-1)
+    seg = jnp.cumsum(newseg.astype(jnp.int32), axis=-1) - 1       # distinct id
+    row_nnz = seg[:, -1] + 1
+    # scatter: invalid or overflowing slots go out of bounds (mode=drop)
+    seg_sc = jnp.where(valid, seg, row_capacity)
+    bs = cols.shape[0]
+    rows_ix = jnp.broadcast_to(jnp.arange(bs)[:, None], seg_sc.shape)
+    out_val = jnp.zeros((bs, row_capacity), jnp.float32).at[rows_ix, seg_sc].add(
+        v_s, mode="drop")
+    out_col = jnp.full((bs, row_capacity), COL_SENTINEL, jnp.int32).at[
+        rows_ix, seg_sc].min(c_s, mode="drop")
+    overflow = jnp.maximum(row_nnz - row_capacity, 0).sum()
+    return out_col, out_val, row_nnz, overflow
+
+
+@functools.partial(jax.jit, static_argnames=("row_capacity", "max_deg_a",
+                                             "max_deg_b", "block_rows"))
+def spgemm(a: CSRDevice, b: CSRDevice, *, row_capacity: int,
+           max_deg_a: int, max_deg_b: int, block_rows: int = 256) -> SpGEMMOut:
+    """C = A·B numeric phase with predicted-capacity output buffers."""
+    m = a.nrows
+    nblocks = -(-m // block_rows)
+    pad_m = nblocks * block_rows
+    row_ids = jnp.arange(pad_m, dtype=jnp.int32).reshape(nblocks, block_rows)
+    row_ids = jnp.minimum(row_ids, m - 1)  # tail clamp; dup rows are sliced off
+
+    def body(rows):
+        cols, vals, _ = gather_products(a, b, rows, max_deg_a, max_deg_b)
+        return _accumulate_block(cols, vals, row_capacity)
+
+    out_col, out_val, row_nnz, overflow = jax.lax.map(body, row_ids)
+    return SpGEMMOut(out_col.reshape(pad_m, row_capacity)[:m],
+                     out_val.reshape(pad_m, row_capacity)[:m],
+                     row_nnz.reshape(pad_m)[:m],
+                     overflow.sum())
+
+
+def dense_of(out: SpGEMMOut, ncols: int) -> jax.Array:
+    """Densify (tests only)."""
+    m, cap = out.col.shape
+    valid = out.col != COL_SENTINEL
+    safe = jnp.where(valid, out.col, 0)
+    rows = jnp.broadcast_to(jnp.arange(m)[:, None], (m, cap))
+    return jnp.zeros((m, ncols), jnp.float32).at[rows, safe].add(
+        jnp.where(valid, out.val, 0.0))

@@ -1,0 +1,56 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True``; on TPU they lower
+natively.  Every wrapper has an identically-shaped oracle in ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import CSRDevice
+from . import flop_per_row as _flop_k
+from . import spgemm_symbolic as _sym_k
+from . import spgemm_numeric as _num_k
+from . import flash_attention as _fa_k
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flop_per_row(a: CSRDevice, b: CSRDevice, *, block_rows: int = 256,
+                 max_deg_a: int = 128) -> jax.Array:
+    rownnz_b = jnp.diff(b.rpt)
+    return _flop_k.flop_per_row_pallas(
+        a.rpt, a.col, rownnz_b, block_rows=block_rows, max_deg_a=max_deg_a,
+        interpret=_interpret())
+
+
+def sampled_symbolic(a: CSRDevice, b: CSRDevice, rows: jax.Array,
+                     max_deg_a: int, max_deg_b: int,
+                     block_samples: int = 8) -> tuple[jax.Array, jax.Array]:
+    """(z*, f*) for the proposed predictor (kernel path)."""
+    return _sym_k.sampled_symbolic_pallas(
+        a.rpt, a.col, b.rpt, b.col, rows, max_deg_a=max_deg_a,
+        max_deg_b=max_deg_b, block_samples=block_samples,
+        interpret=_interpret())
+
+
+def spgemm_numeric(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
+                   max_deg_a: int, max_deg_b: int, row_capacity: int,
+                   block_rows: int = 8):
+    """Kernel numeric phase + XLA compaction → (col, val, row_nnz, overflow)."""
+    cols, vals, first = _num_k.spgemm_numeric_pallas(
+        a.rpt, a.col, a.val, b.rpt, b.col, b.val, rows,
+        max_deg_a=max_deg_a, max_deg_b=max_deg_b, block_rows=block_rows,
+        interpret=_interpret())
+    return _num_k.compact(cols, vals, first, row_capacity)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    return _fa_k.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                                 block_k=block_k, interpret=_interpret())

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csr import CSRDevice, COL_SENTINEL
+from repro.core import flop as flop_mod
+from repro.core import predictor as pred_mod
+from repro.core import spgemm as spgemm_mod
+
+
+def flop_per_row_ref(a_rpt, a_col, rownnz_b):
+    """Oracle for kernels.flop_per_row (thin shim over core.flop)."""
+    m = a_rpt.shape[0] - 1
+    cap = a_col.shape[0]
+    k = rownnz_b.shape[0]
+    a = CSRDevice(rpt=a_rpt, col=a_col, val=jnp.zeros(cap, jnp.float32),
+                  shape=(m, k))
+    b_rpt = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                             jnp.cumsum(rownnz_b).astype(jnp.int32)])
+    b = CSRDevice(rpt=b_rpt, col=jnp.zeros(1, jnp.int32),
+                  val=jnp.zeros(1, jnp.float32), shape=(k, 1))
+    floprc, _ = flop_mod.flop_per_row(a, b)
+    return floprc
+
+
+def sampled_symbolic_ref(a: CSRDevice, b: CSRDevice, rows, max_deg_a, max_deg_b):
+    """Oracle for kernels.spgemm_symbolic: (z*, f*)."""
+    cols, valid = pred_mod.gather_sampled_products(a, b, rows, max_deg_a, max_deg_b)
+    z = pred_mod.count_distinct_sorted(cols).sum()
+    f = valid.sum()
+    return z, f
+
+
+def spgemm_numeric_ref(a: CSRDevice, b: CSRDevice, rows, max_deg_a, max_deg_b,
+                       row_capacity):
+    """Oracle for kernels.spgemm_numeric (+compact): per-row CSR-ish output."""
+    cols, vals, _ = spgemm_mod.gather_products(a, b, rows, max_deg_a, max_deg_b)
+    return spgemm_mod._accumulate_block(cols, vals, row_capacity)
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """Oracle for kernels.flash_attention: dense softmax attention, fp32."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) / (d ** 0.5)
+    if causal:
+        sk = k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

@@ -1,0 +1,98 @@
+"""Bitonic sorting network on the last axis — Pallas-compatible.
+
+The paper's Algorithm 2 counts distinct output columns with a per-thread hash
+table (linear probing, data-dependent `while`).  On TPU that serializes on the
+scalar core, so we replace it with a bitonic network (DESIGN.md §3): every
+compare-exchange stage is a static reshape + min/max/where — pure VPU work,
+no gathers, no data-dependent control flow.  Usable both inside ``pallas_call``
+kernel bodies and as plain jnp (the ref path).
+
+Last-axis length must be a power of two; pad with ``COL_SENTINEL`` (sorts to
+the tail) before calling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def _stage_masks(n: int, k: int, j: int) -> jnp.ndarray:
+    """Ascending-direction mask for stage (k, j), shape (n//(2s), s).
+
+    Built from ``broadcasted_iota`` (traced, not a captured constant — Pallas
+    kernels may not close over host arrays).  Partners differ only in bit
+    j < k, so bit k is shared between the two slots: slot 0's index suffices.
+    """
+    s = 1 << j
+    m_idx = jax.lax.broadcasted_iota(jnp.int32, (n // (2 * s), s), 0)
+    r_idx = jax.lax.broadcasted_iota(jnp.int32, (n // (2 * s), s), 1)
+    i0 = m_idx * (2 * s) + r_idx
+    return ((i0 >> k) & 1) == 0
+
+
+def bitonic_sort(keys: jnp.ndarray) -> jnp.ndarray:
+    """Sort ``keys`` ascending along the last axis (power-of-two length)."""
+    out, _ = bitonic_sort_pairs(keys, None)
+    return out
+
+
+def bitonic_sort_pairs(keys: jnp.ndarray, vals: jnp.ndarray | None):
+    """Sort keys ascending, carrying ``vals`` through the same permutation."""
+    n = keys.shape[-1]
+    assert _is_pow2(n), f"bitonic length {n} not a power of two"
+    log_n = n.bit_length() - 1
+    lead = keys.shape[:-1]
+    for k in range(1, log_n + 1):
+        for j in range(k - 1, -1, -1):
+            s = 1 << j
+            up = _stage_masks(n, k, j)
+            kk = keys.reshape(lead + (n // (2 * s), 2, s))
+            a, b = kk[..., 0, :], kk[..., 1, :]
+            do_swap = jnp.where(up, a > b, a < b)
+            a2 = jnp.where(do_swap, b, a)
+            b2 = jnp.where(do_swap, a, b)
+            keys = jnp.concatenate(
+                [a2[..., None, :], b2[..., None, :]], axis=-2).reshape(lead + (n,))
+            if vals is not None:
+                vv = vals.reshape(lead + (n // (2 * s), 2, s))
+                va, vb = vv[..., 0, :], vv[..., 1, :]
+                va2 = jnp.where(do_swap, vb, va)
+                vb2 = jnp.where(do_swap, va, vb)
+                vals = jnp.concatenate(
+                    [va2[..., None, :], vb2[..., None, :]], axis=-2).reshape(lead + (n,))
+    return keys, vals
+
+
+def segmented_run_sums(sorted_keys: jnp.ndarray, vals: jnp.ndarray,
+                       sentinel) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """For runs of equal keys in a sorted buffer, place the run's value-sum at
+    the run's FIRST slot (other slots keep partial sums; mask with ``first``).
+
+    Log-step segmented suffix-scan: static shifts only (Pallas-safe).
+    Returns (first_mask, run_sums_at_first).
+    """
+    n = sorted_keys.shape[-1]
+    acc = vals
+    shift = 1
+    while shift < n:
+        shifted_acc = jnp.concatenate(
+            [acc[..., shift:], jnp.zeros_like(acc[..., :shift])], axis=-1)
+        shifted_key = jnp.concatenate(
+            [sorted_keys[..., shift:],
+             jnp.full_like(sorted_keys[..., :shift], sentinel)], axis=-1)
+        same = (shifted_key == sorted_keys) & (sorted_keys != sentinel)
+        acc = acc + jnp.where(same, shifted_acc, 0.0)
+        shift *= 2
+    prev = jnp.concatenate(
+        [jnp.full_like(sorted_keys[..., :1], sentinel), sorted_keys[..., :-1]],
+        axis=-1)
+    first = (sorted_keys != prev) & (sorted_keys != sentinel)
+    return first, acc

@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each live cell this script jits the real step function (train_step /
+forward / decode_step) with the production in/out shardings, lowers it
+against ShapeDtypeStruct inputs (no allocation), compiles for the
+single-pod (16,16) and multi-pod (2,16,16) meshes, and records
+memory_analysis / cost_analysis / the parsed collective schedule to
+artifacts/dryrun/<arch>__<shape>__<mesh>.json — the roofline inputs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch xlstm-125m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi    # 512-chip only
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_config, registry
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch import specs as specs_mod
+from repro.models import transformer as tmod
+from repro.models.schema import abstract_params
+from repro.models.sharding import make_rules, specs_from_schema
+from repro.train import optimizer as opt_mod
+from repro.train.train_loop import make_train_step
+from repro.roofline import analysis as roof
+from repro.roofline import hlo_cost
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def _shard(mesh, tree_specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        return dict(
+            argument_size=getattr(ma, "argument_size_in_bytes", None),
+            output_size=getattr(ma, "output_size_in_bytes", None),
+            temp_size=getattr(ma, "temp_size_in_bytes", None),
+            generated_code_size=getattr(ma, "generated_code_size_in_bytes", None),
+        )
+    except Exception as e:  # CPU backend may not implement it
+        return {"error": str(e)}
+
+
+def _cost_analysis(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and
+                (k in ("flops", "bytes accessed") or k.startswith("bytes accessed"))}
+    except Exception as e:
+        return {"error": str(e)}
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, *, keep_hlo: bool = False):
+    import dataclasses
+    cfg = get_config(arch)
+    # the de-TP recipe only pays when the batch shards over BOTH mesh axes;
+    # small-batch cells of sub-1B archs fall back to TP (EXPERIMENTS §Perf
+    # iteration 5 — blanket de-TP replicated compute 16× on whisper prefill)
+    if not cfg.tensor_parallel:
+        full = 512 if multi_pod else 256
+        if specs_mod.SHAPES[shape]["batch"] % full != 0:
+            cfg = dataclasses.replace(cfg, tensor_parallel=True)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    mesh_model = 16
+    kind = specs_mod.SHAPES[shape]["kind"]
+    dt = jnp.dtype(cfg.dtype)
+
+    schema = tmod.build_schema(cfg, mesh_model=mesh_model)
+    rules = make_rules(cfg, mesh_model=mesh_model, multi_pod=multi_pod)
+    pspecs = specs_from_schema(schema, rules)
+    params_abs = abstract_params(schema, dtype=dt)
+    params_sh = _shard(mesh, pspecs)
+
+    t0 = time.time()
+    if kind == "train":
+        opt_cfg = opt_mod.AdamWConfig(state_dtype=cfg.opt_state_dtype)
+        opt_abs = jax.eval_shape(
+            lambda p: opt_mod.init_state(opt_cfg, p), params_abs)
+        # ZeRO: optimizer state additionally shards `embed` over data(+pod)
+        zero_rules = dict(rules)
+        zero_rules["embed"] = ("pod", "data") if multi_pod else ("data",)
+        opt_specs = opt_mod.AdamState(
+            P(), specs_from_schema(schema, zero_rules),
+            specs_from_schema(schema, zero_rules))
+        opt_sh = _shard(mesh, opt_specs)
+        batch_abs = specs_mod.batch_structs(cfg, shape)
+        batch_sh = _shard(mesh, specs_mod.batch_pspecs(cfg, shape, multi_pod))
+        accum = int(os.environ.get("REPRO_TRAIN_ACCUM", "1"))
+        step = make_train_step(cfg, opt_cfg, accum=accum)
+        jitted = jax.jit(step,
+                         in_shardings=(params_sh, opt_sh, batch_sh),
+                         out_shardings=(params_sh, opt_sh, None))
+        with mesh:
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        tokens = specs_mod.SHAPES[shape]["batch"] * specs_mod.SHAPES[shape]["seq"]
+        mflops = roof.model_flops_train(cfg, tokens)
+    elif kind == "prefill":
+        batch_abs = specs_mod.batch_structs(cfg, shape)
+        batch_sh = _shard(mesh, specs_mod.batch_pspecs(cfg, shape, multi_pod))
+
+        def fwd(params, batch):
+            logits, aux, _ = tmod.forward(params, cfg, batch)
+            return logits
+
+        jitted = jax.jit(fwd, in_shardings=(params_sh, batch_sh),
+                         out_shardings=None)
+        with mesh:
+            lowered = jitted.lower(params_abs, batch_abs)
+        tokens = specs_mod.SHAPES[shape]["batch"] * specs_mod.SHAPES[shape]["seq"]
+        mflops = roof.model_flops_prefill(cfg, tokens)
+    else:  # decode
+        tokens_abs, len_abs, cache_abs, enc_abs = specs_mod.decode_structs(cfg, shape)
+        tok_spec, len_spec, cache_specs, enc_spec = specs_mod.decode_pspecs(
+            cfg, shape, multi_pod)
+        cache_sh = _shard(mesh, cache_specs)
+
+        if cfg.is_encoder_decoder:
+            def serve_step(params, cache, tokens, cur_len, enc_out):
+                return tmod.decode_step(params, cfg, tokens, cache, cur_len,
+                                        enc_out=enc_out)
+            jitted = jax.jit(serve_step, in_shardings=(
+                params_sh, cache_sh, NamedSharding(mesh, tok_spec),
+                NamedSharding(mesh, len_spec), NamedSharding(mesh, enc_spec)),
+                out_shardings=(None, cache_sh))
+            with mesh:
+                lowered = jitted.lower(params_abs, cache_abs, tokens_abs,
+                                       len_abs, enc_abs)
+        else:
+            def serve_step(params, cache, tokens, cur_len):
+                return tmod.decode_step(params, cfg, tokens, cache, cur_len)
+            jitted = jax.jit(serve_step, in_shardings=(
+                params_sh, cache_sh, NamedSharding(mesh, tok_spec),
+                NamedSharding(mesh, len_spec)),
+                out_shardings=(None, cache_sh))
+            with mesh:
+                lowered = jitted.lower(params_abs, cache_abs, tokens_abs, len_abs)
+        mflops = roof.model_flops_decode(cfg, specs_mod.SHAPES[shape]["batch"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = _mem_analysis(compiled)
+    cost = {k: v for k, v in _cost_analysis(compiled).items()
+            if k in ("flops", "bytes accessed", "error")}
+    hlo = compiled.as_text()
+    # trip-count-aware model (xla cost_analysis counts scan bodies once)
+    parsed = hlo_cost.analyze(hlo)
+    rl = roof.Roofline.build(parsed["flops"], parsed["bytes"],
+                             parsed["collectives"], mflops, chips)
+    rec = dict(arch=arch, shape=shape, mesh="multi" if multi_pod else "single",
+               chips=chips, kind=kind, lower_s=t_lower, compile_s=t_compile,
+               memory_analysis=mem, cost_analysis_raw=cost,
+               hlo_parsed=dict(flops=parsed["flops"], bytes=parsed["bytes"],
+                               collectives=parsed["collectives"]),
+               roofline=rl.to_dict(), hlo_bytes=len(hlo))
+    if keep_hlo:
+        rec["hlo_path"] = _save_hlo(arch, shape, multi_pod, hlo)
+    print(f"[dryrun] {arch} × {shape} × {'multi' if multi_pod else 'single'}: "
+          f"compile {t_compile:.1f}s  flops/chip {parsed['flops']:.3e}  "
+          f"coll/chip {sum(parsed['collectives'].values()):.3e}B  "
+          f"bottleneck {rl.bottleneck}", flush=True)
+    print("  memory_analysis:", mem, flush=True)
+    print("  cost_analysis:", {k: f"{v:.3e}" for k, v in cost.items()
+                               if isinstance(v, float)}, flush=True)
+    return rec
+
+
+def _save_hlo(arch, shape, multi_pod, hlo):
+    out_dir = os.environ.get("REPRO_HLO_DIR", os.path.abspath(ART_DIR))
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape}__{'multi' if multi_pod else 'single'}.hlo")
+    with open(path, "w") as f:
+        f.write(hlo)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(registry().keys())
+    shapes = [args.shape] if args.shape else list(specs_mod.SHAPES.keys())
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    art = os.path.abspath(ART_DIR)
+    os.makedirs(art, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            if not specs_mod.cell_is_live(arch, shape):
+                print(f"[dryrun] skip {arch} × {shape} (DESIGN §6)", flush=True)
+                continue
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                out = os.path.join(art, tag + ".json")
+                if os.path.exists(out):
+                    print(f"[dryrun] cached {tag}", flush=True)
+                    continue
+                try:
+                    rec = lower_cell(arch, shape, mp, keep_hlo=args.keep_hlo)
+                    with open(out + ".tmp", "w") as f:
+                        json.dump(rec, f, indent=1)
+                    os.replace(out + ".tmp", out)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((tag, str(e)))
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for t, e in failures:
+            print("  ", t, e[:200])
+        raise SystemExit(1)
+    print("[dryrun] ALL CELLS COMPILED", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production meshes.  A FUNCTION, not a module constant — importing this
+module never touches jax device state (required for the smoke-test/dry-run
+split: tests see 1 device, the dry-run sees 512 placeholders)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices: int = 4):
+    """Tiny mesh for CI-class integration tests (data×model square-ish)."""
+    d = max(1, devices // 2)
+    m = max(1, devices // d)
+    return jax.make_mesh((d, m), ("data", "model"))
+
+
+def mesh_chip_count(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

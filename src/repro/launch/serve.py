@@ -1,0 +1,74 @@
+"""Serving driver: load a checkpoint (or init), serve batched requests.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-32b --smoke \
+      --batch 4 --prompt-len 8 --gen 16 [--ckpt-dir /tmp/run1]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, get_smoke_config
+from repro.models import transformer as tmod
+from repro.models.schema import init_params
+from repro.serve import engine
+from repro.ckpt import checkpoint as ckpt_mod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = init_params(tmod.build_schema(cfg, 1), jax.random.PRNGKey(0),
+                         jnp.dtype(cfg.dtype))
+    if args.ckpt_dir and ckpt_mod.latest_step(args.ckpt_dir) is not None:
+        # checkpoints store (params, opt_state); restore params only
+        import jax.tree_util as jtu
+        opt_like = None
+        try:
+            from repro.train import optimizer as opt_mod
+            opt_like = jax.eval_shape(
+                lambda p: opt_mod.init_state(opt_mod.AdamWConfig(), p), params)
+            (params, _), _, step = ckpt_mod.restore(
+                args.ckpt_dir, (params, opt_like))
+            print(f"[serve] restored step {step}")
+        except AssertionError:
+            params, _, step = ckpt_mod.restore(args.ckpt_dir, params)
+            print(f"[serve] restored (params-only) step {step}")
+
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+    fe = None
+    if cfg.is_encoder_decoder:
+        fe = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.encoder_seq_len, cfg.d_model)), jnp.float32)
+    sess = engine.start_session(cfg, params, args.batch,
+                                args.prompt_len + args.gen + 1,
+                                frame_embeds=fe)
+    t0 = time.time()
+    toks = engine.generate(sess, prompts, args.gen,
+                           temperature=args.temperature, seed=args.seed)
+    dt = time.time() - t0
+    print("[serve] generated:\n", np.asarray(toks))
+    print(f"[serve] {args.batch * args.gen} tokens in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s batched)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Input specs (ShapeDtypeStruct stand-ins) and shardings per (arch × shape).
+
+The four assigned shape cells; ``decode_*``/``long_*`` lower ``serve_step``
+(one new token against a seq_len KV cache), ``train_4k`` lowers
+``train_step``, ``prefill_32k`` lowers the full-sequence forward.
+long_500k runs only for the sub-quadratic archs (DESIGN §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+SHAPES: dict[str, dict] = {
+    "train_4k":    dict(kind="train",   seq=4_096,   batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768,  batch=32),
+    "decode_32k":  dict(kind="decode",  seq=32_768,  batch=128),
+    "long_500k":   dict(kind="decode",  seq=524_288, batch=1),
+}
+
+# long-context decode needs sub-quadratic state (SSM / hybrid-with-window)
+LONG_CONTEXT_ARCHS = {"xlstm-125m", "zamba2-7b"}
+
+VISION_PATCHES = 256          # vlm stub: patches prepended to the sequence
+
+
+def cell_is_live(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_ARCHS
+    return True
+
+
+def live_cells(archs: list[str]) -> list[tuple[str, str]]:
+    return [(a, s) for a in archs for s in SHAPES if cell_is_live(a, s)]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_structs(cfg: ModelConfig, shape_name: str) -> dict[str, Any]:
+    """ShapeDtypeStructs for the model inputs of a train/prefill cell."""
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    dt = jnp.dtype(cfg.dtype)
+    batch: dict[str, Any] = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.mrope_sections:
+        batch["positions"] = _sds((3, b, s), jnp.int32)
+    else:
+        batch["positions"] = _sds((b, s), jnp.int32)
+    if cfg.frontend == "vision_stub":
+        batch["patch_embeds"] = _sds((b, VISION_PATCHES, cfg.d_model), dt)
+    if cfg.frontend == "audio_stub":
+        batch["frame_embeds"] = _sds((b, cfg.encoder_seq_len, cfg.d_model), dt)
+    if sh["kind"] == "train":
+        batch["labels"] = _sds((b, s), jnp.int32)
+    return batch
+
+
+def _batch_axes(cfg: ModelConfig, batch: int, multi_pod: bool):
+    """Longest divisible prefix of the batch-shardable mesh axes."""
+    axes = [("pod", 2)] if multi_pod else []
+    axes.append(("data", 16))
+    if not cfg.tensor_parallel:
+        axes.append(("model", 16))
+    chosen, prod = [], 1
+    for name, size in axes:
+        if batch % (prod * size) == 0:
+            chosen.append(name)
+            prod *= size
+    if not chosen:
+        return None
+    return chosen[0] if len(chosen) == 1 else tuple(chosen)
+
+
+def batch_pspecs(cfg: ModelConfig, shape_name: str, multi_pod: bool) -> dict:
+    sh = SHAPES[shape_name]
+    dshard = _batch_axes(cfg, sh["batch"], multi_pod)
+    out = {"tokens": P(dshard, None)}
+    out["positions"] = P(None, dshard, None) if cfg.mrope_sections else P(dshard, None)
+    if cfg.frontend == "vision_stub":
+        out["patch_embeds"] = P(dshard, None, None)
+    if cfg.frontend == "audio_stub":
+        out["frame_embeds"] = P(dshard, None, None)
+    if sh["kind"] == "train":
+        out["labels"] = P(dshard, None)
+    return out
+
+
+def decode_structs(cfg: ModelConfig, shape_name: str, mesh_model: int = 16):
+    """(tokens, cur_len, cache, enc_out?) structs for a decode cell."""
+    from repro.models import transformer as tmod
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    tokens = _sds((b, 1), jnp.int32)
+    cur_len = _sds((), jnp.int32)
+    cache = jax.eval_shape(lambda: tmod.init_cache(cfg, b, s, mesh_model))
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _sds((b, cfg.encoder_seq_len, cfg.d_model),
+                       jnp.dtype(cfg.dtype))
+    return tokens, cur_len, cache, enc_out
+
+
+def decode_pspecs(cfg: ModelConfig, shape_name: str, multi_pod: bool,
+                  mesh_model: int = 16):
+    from repro.models.sharding import cache_spec_tree
+    sh = SHAPES[shape_name]
+    dsize = 32 if multi_pod else 16
+    data = ("pod", "data") if multi_pod else "data"
+    dshard = data if sh["batch"] % dsize == 0 else None
+    cache_specs = cache_spec_tree(cfg, mesh_model, multi_pod)
+    if dshard is None:  # long_500k batch=1: replicate the batch axis
+        cache_specs = jax.tree_util.tree_map(
+            lambda p: P(*[None if ax in ("data", ("pod", "data")) else ax
+                          for ax in p]), cache_specs,
+            is_leaf=lambda x: isinstance(x, P))
+    tokens_spec = P(dshard, None)
+    enc_spec = P(dshard, None, None) if cfg.is_encoder_decoder else None
+    return tokens_spec, P(), cache_specs, enc_spec

@@ -1,0 +1,121 @@
+"""Training driver: config → data → sharded train loop → checkpoints.
+
+Runs on whatever devices exist (1 CPU here, a pod mesh in production — the
+mesh is data×model over available devices).  Fault tolerance in the loop:
+resume-from-latest on start, periodic atomic checkpoints, preemption-safe
+(SIGTERM triggers a final checkpoint before exit).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --steps 50 \
+      --smoke --batch 8 --seq 128 --ckpt-dir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import transformer as tmod
+from repro.models.schema import init_params
+from repro.train import optimizer as opt_mod
+from repro.train.train_loop import make_train_step
+from repro.ckpt import checkpoint as ckpt_mod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    schema = tmod.build_schema(cfg, mesh_model=1)
+    params = init_params(schema, jax.random.PRNGKey(args.seed),
+                         jnp.dtype(cfg.dtype))
+    opt_cfg = opt_mod.AdamWConfig(lr_peak=args.lr, warmup_steps=args.warmup,
+                                  total_steps=args.steps,
+                                  state_dtype=cfg.opt_state_dtype)
+    opt_state = opt_mod.init_state(opt_cfg, params)
+
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                                  global_batch=args.batch, seed=args.seed))
+
+    start_step = 0
+    if args.ckpt_dir and ckpt_mod.latest_step(args.ckpt_dir) is not None:
+        (params, opt_state), extra, start_step = ckpt_mod.restore(
+            args.ckpt_dir, (params, opt_state))
+        print(f"[train] resumed from step {start_step}", flush=True)
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, accum=args.accum))
+
+    stop = {"now": False}
+    if args.ckpt_dir:
+        def _sig(_s, _f):
+            stop["now"] = True
+        signal.signal(signal.SIGTERM, _sig)
+
+    def make_batch(i):
+        b = data.batch(i)
+        out = {"tokens": jnp.asarray(b["tokens"]),
+               "labels": jnp.asarray(b["labels"]),
+               "positions": jnp.asarray(b["positions"])}
+        if cfg.mrope_sections:
+            out["positions"] = jnp.broadcast_to(out["positions"][None],
+                                                (3,) + b["positions"].shape)
+        if cfg.frontend == "vision_stub":
+            rng = np.random.default_rng(i)
+            out["patch_embeds"] = jnp.asarray(
+                rng.standard_normal((args.batch, 8, cfg.d_model)),
+                jnp.dtype(cfg.dtype))
+        if cfg.frontend == "audio_stub":
+            rng = np.random.default_rng(i)
+            out["frame_embeds"] = jnp.asarray(
+                rng.standard_normal(
+                    (args.batch, cfg.encoder_seq_len, cfg.d_model)),
+                jnp.dtype(cfg.dtype))
+        return out
+
+    losses = []
+    t0 = time.time()
+    for i in range(start_step, args.steps):
+        params, opt_state, metrics = step_fn(params, opt_state, make_batch(i))
+        losses.append(float(metrics["loss"]))
+        if (i + 1) % args.log_every == 0 or i == args.steps - 1:
+            print(f"[train] step {i+1:5d} loss {losses[-1]:.4f} "
+                  f"ce {float(metrics['ce']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/max(i+1-start_step,1):.2f}s/step)",
+                  flush=True)
+        if args.ckpt_dir and ((i + 1) % args.ckpt_every == 0 or stop["now"]
+                              or i == args.steps - 1):
+            ckpt_mod.save(args.ckpt_dir, i + 1, (params, opt_state),
+                          extra={"seed": args.seed})
+            if stop["now"]:
+                print("[train] preemption checkpoint written; exiting",
+                      flush=True)
+                sys.exit(0)
+    first, last = losses[0], np.mean(losses[-5:])
+    print(f"[train] done: first loss {first:.4f} → last(avg5) {last:.4f}")
+    return first, last
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,339 @@
+"""Attention blocks: GQA (RoPE/M-RoPE) and MLA (deepseek-v3), train + decode.
+
+Sharding story (DESIGN §7):
+  * training/prefill — q heads sharded over `model` (padded to a multiple of
+    the mesh size at schema-build time); kv heads replicated when
+    kv < mesh_model (their activations are small), sharded otherwise.
+  * decode — the KV cache is sharded over `model` on the SEQUENCE axis;
+    softmax over the sharded axis makes GSPMD emit the flash-decode
+    max/sum/output all-reduces automatically.  No head-divisibility
+    constraint, no cache padding.
+  * MLA decode uses the absorbed form (score against the 512-d latent cache
+    directly) — the compact-cache property that makes MLA serve 32k+.
+
+The XLA attention path is chunked over query blocks (O(S·block) memory); the
+Pallas flash kernel (repro.kernels.flash_attention) is the TPU hot path for
+training and is validated against the same math.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .schema import PSpec
+from .layers import apply_rope, apply_norm, norm_schema
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# schemas
+# --------------------------------------------------------------------------- #
+def gqa_schema(cfg, mesh_model: int) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hp = cfg.padded_heads(mesh_model)
+    kv = cfg.padded_kv_heads(mesh_model)
+    sch = {
+        "wq": PSpec((d, hp, hd), ("embed", "heads", None)),
+        "wk": PSpec((d, kv, hd), ("embed", "kv_heads", None)),
+        "wv": PSpec((d, kv, hd), ("embed", "kv_heads", None)),
+        "wo": PSpec((hp, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        sch["bq"] = PSpec((hp, hd), ("heads", None), "zeros")
+        sch["bk"] = PSpec((kv, hd), ("kv_heads", None), "zeros")
+        sch["bv"] = PSpec((kv, hd), ("kv_heads", None), "zeros")
+    return sch
+
+
+def mla_schema(cfg, mesh_model: int) -> dict:
+    d = cfg.d_model
+    hp = cfg.padded_heads(mesh_model)
+    qk = cfg.mla_qk_nope_dim + cfg.mla_qk_rope_dim
+    return {
+        "wq_a": PSpec((d, cfg.mla_q_lora_rank), ("embed", None)),
+        "q_norm": {"scale": PSpec((cfg.mla_q_lora_rank,), (None,), "ones")},
+        "wq_b": PSpec((cfg.mla_q_lora_rank, hp, qk), (None, "heads", None)),
+        "wkv_a": PSpec((d, cfg.mla_kv_lora_rank + cfg.mla_qk_rope_dim),
+                       ("embed", None)),
+        "kv_norm": {"scale": PSpec((cfg.mla_kv_lora_rank,), (None,), "ones")},
+        "wkv_b": PSpec((cfg.mla_kv_lora_rank, hp,
+                        cfg.mla_qk_nope_dim + cfg.mla_v_dim),
+                       (None, "heads", None)),
+        "wo": PSpec((hp, cfg.mla_v_dim, d), ("heads", None, "embed")),
+    }
+
+
+def attention_schema(cfg, mesh_model: int) -> dict:
+    if cfg.attention_type == "mla":
+        return mla_schema(cfg, mesh_model)
+    return gqa_schema(cfg, mesh_model)
+
+
+# --------------------------------------------------------------------------- #
+# caches
+# --------------------------------------------------------------------------- #
+class KVCache(NamedTuple):
+    """GQA cache: k/v (B, KV, Smax, hd).  MLA: ckv (B, Smax, latent),
+    krope (B, Smax, rope) — stored in k/v respectively (2D per token)."""
+    k: jax.Array
+    v: jax.Array
+
+
+def init_gqa_cache(cfg, batch: int, max_len: int, dtype,
+                   mesh_model: int = 1) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shp = (batch, cfg.padded_kv_heads(mesh_model), max_len, hd)
+    return KVCache(jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype) -> KVCache:
+    return KVCache(jnp.zeros((batch, max_len, cfg.mla_kv_lora_rank), dtype),
+                   jnp.zeros((batch, max_len, cfg.mla_qk_rope_dim), dtype))
+
+
+# --------------------------------------------------------------------------- #
+# chunked causal attention (XLA path)
+# --------------------------------------------------------------------------- #
+def _causal_attn_chunked(q, k, v, *, chunk: int = 512, causal: bool = True,
+                         window: int = 0):
+    """q/k (B,H,S,D); v (B,KV,S,Dv) — Dv may differ (MLA).  GQA by head
+    grouping; O(S·chunk) memory."""
+    b, h, s, d = q.shape
+    dv = v.shape[-1]
+    kv = k.shape[1]
+    group = h // kv
+    qg = q.reshape(b, kv, group, s, d)
+    scale = 1.0 / (d ** 0.5)
+    nchunks = -(-s // chunk)
+    pad_s = nchunks * chunk
+    if pad_s != s:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad_s - s), (0, 0)))
+    qc = qg.reshape(b, kv, group, nchunks, chunk, d).transpose(3, 0, 1, 2, 4, 5)
+    kpos = jnp.arange(k.shape[2])
+
+    def one_chunk(ci, qch):
+        # qch (B,KV,G,C,D)
+        sco = jnp.einsum("bkgcd,bksd->bkgcs", qch.astype(jnp.float32),
+                         k.astype(jnp.float32)) * scale
+        qpos = ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((chunk, k.shape[2]), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        sco = jnp.where(mask[None, None, None], sco, NEG_INF)
+        p = jax.nn.softmax(sco, axis=-1)
+        return jnp.einsum("bkgcs,bksd->bkgcd", p, v.astype(jnp.float32))
+
+    out = jax.lax.map(lambda args: one_chunk(*args),
+                      (jnp.arange(nchunks), qc))              # (N,B,KV,G,C,Dv)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, kv, group, pad_s, dv)
+    return out[:, :, :, :s].reshape(b, h, s, dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# GQA forward
+# --------------------------------------------------------------------------- #
+def _project_qkv(p, cfg, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def gqa_forward(p, cfg, x, positions, *, causal: bool = True,
+                window: int = 0) -> jax.Array:
+    """Full-sequence attention (training / prefill).  x: (B, S, d)."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    qh = q.transpose(0, 2, 1, 3)                 # (B, Hp, S, hd)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    # pad-head grouping: Hp % KV == 0 is guaranteed only when Hp//KV divides
+    # evenly; pad kv virtually by repeating the last kv head for extra groups.
+    hp = qh.shape[1]
+    kvh = kh.shape[1]
+    if hp % kvh != 0:
+        reps = -(-hp // kvh)
+        kh = jnp.repeat(kh, reps, axis=1)[:, :hp]
+        vh = jnp.repeat(vh, reps, axis=1)[:, :hp]
+    out = _causal_attn_chunked(qh, kh, vh, causal=causal, window=window)
+    out = out.transpose(0, 2, 1, 3)              # (B, S, Hp, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def gqa_prefill(p, cfg, x, positions, cache: KVCache, *, window: int = 0):
+    """Prefill: forward + write k/v into the cache at [0, S)."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    new_cache = KVCache(
+        jax.lax.dynamic_update_slice(cache.k, kh.astype(cache.k.dtype), (0, 0, 0, 0)),
+        jax.lax.dynamic_update_slice(cache.v, vh.astype(cache.v.dtype), (0, 0, 0, 0)))
+    qh = q.transpose(0, 2, 1, 3)
+    hp, kvh = qh.shape[1], kh.shape[1]
+    if hp % kvh != 0:
+        reps = -(-hp // kvh)
+        kh = jnp.repeat(kh, reps, axis=1)[:, :hp]
+        vh = jnp.repeat(vh, reps, axis=1)[:, :hp]
+    out = _causal_attn_chunked(qh, kh, vh, causal=True, window=window)
+    out = out.transpose(0, 2, 1, 3)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), new_cache
+
+
+def gqa_decode(p, cfg, x, positions, cache: KVCache, cur_len, *,
+               window: int = 0):
+    """One-token decode.  x: (B, 1, d); cache k/v (B, KV, Smax, hd).
+
+    The cache sequence axis may be sharded over `model`; the softmax over it
+    then lowers to the flash-decode all-reduce pattern under GSPMD.
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    # append new kv at cur_len
+    knew = k.transpose(0, 2, 1, 3).astype(cache.k.dtype)   # (B, KV, 1, hd)
+    vnew = v.transpose(0, 2, 1, 3).astype(cache.v.dtype)
+    smax = cache.k.shape[2]
+    zero = jnp.zeros((), jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache.k, knew, (zero, zero, cur_len, zero))
+    cv = jax.lax.dynamic_update_slice(cache.v, vnew, (zero, zero, cur_len, zero))
+    new_cache = KVCache(ck, cv)
+
+    qh = q.transpose(0, 2, 1, 3)                            # (B, Hp, 1, hd)
+    hp, kvh = qh.shape[1], ck.shape[1]
+    group = -(-hp // kvh)
+    qg = qh.reshape(b, kvh, -1, 1, qh.shape[-1]) if hp % kvh == 0 else None
+    if qg is None:
+        kk = jnp.repeat(ck, group, axis=1)[:, :hp]
+        vv = jnp.repeat(cv, group, axis=1)[:, :hp]
+        sco = jnp.einsum("bhqd,bhsd->bhqs", qh.astype(jnp.float32),
+                         kk.astype(jnp.float32))
+    else:
+        kk, vv = ck, cv
+        sco = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                         kk.astype(jnp.float32)).reshape(b, hp, 1, smax)
+    sco = sco / (qh.shape[-1] ** 0.5)
+    pos_mask = jnp.arange(smax) <= cur_len
+    if window:
+        pos_mask &= jnp.arange(smax) > cur_len - window
+    sco = jnp.where(pos_mask[None, None, None], sco, NEG_INF)
+    prob = jax.nn.softmax(sco, axis=-1)
+    if qg is None:
+        out = jnp.einsum("bhqs,bhsd->bhqd", prob, vv.astype(jnp.float32))
+    else:
+        out = jnp.einsum("bkgqs,bksd->bkgqd",
+                         prob.reshape(b, kvh, group, 1, smax),
+                         vv.astype(jnp.float32)).reshape(b, hp, 1, -1)
+    out = out.astype(x.dtype).transpose(0, 2, 1, 3)         # (B, 1, Hp, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), new_cache
+
+
+# --------------------------------------------------------------------------- #
+# MLA forward (deepseek-v3)
+# --------------------------------------------------------------------------- #
+def _mla_qkv(p, cfg, x, positions):
+    nope, rope = cfg.mla_qk_nope_dim, cfg.mla_qk_rope_dim
+    cq = apply_norm(p["q_norm"], x @ p["wq_a"].astype(x.dtype))
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = x @ p["wkv_a"].astype(x.dtype)
+    ckv, k_rope = ckv_full[..., : cfg.mla_kv_lora_rank], ckv_full[..., cfg.mla_kv_lora_rank:]
+    ckv = apply_norm(p["kv_norm"], ckv)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_forward(p, cfg, x, positions, *, causal: bool = True) -> jax.Array:
+    """Training/prefill MLA: expand latent to full k/v (FLOP-optimal for S≫1)."""
+    nope = cfg.mla_qk_nope_dim
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, cfg, x, positions)
+    kv = jnp.einsum("bsr,rhk->bshk", ckv, p["wkv_b"].astype(x.dtype))
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    hp = q_nope.shape[2]
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                k_rope.shape[:2] + (hp, k_rope.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], -1).transpose(0, 2, 1, 3)
+    k = jnp.concatenate([k_nope, k_rope_b], -1).transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    out = _causal_attn_chunked(q, k, vh, causal=causal)
+    out = out.transpose(0, 2, 1, 3)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def mla_prefill(p, cfg, x, positions, cache: KVCache):
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, cfg, x, positions)
+    new_cache = KVCache(
+        jax.lax.dynamic_update_slice(cache.k, ckv.astype(cache.k.dtype), (0, 0, 0)),
+        jax.lax.dynamic_update_slice(cache.v, k_rope.astype(cache.v.dtype), (0, 0, 0)))
+    out = mla_forward(p, cfg, x, positions, causal=True)
+    return out, new_cache
+
+
+def mla_decode(p, cfg, x, positions, cache: KVCache, cur_len):
+    """Absorbed-form decode against the latent cache (B, Smax, 512 + 64)."""
+    nope = cfg.mla_qk_nope_dim
+    q_nope, q_rope, ckv_new, k_rope_new = _mla_qkv(p, cfg, x, positions)
+    smax = cache.k.shape[1]
+    zero = jnp.zeros((), jnp.int32)
+    ck = jax.lax.dynamic_update_slice(
+        cache.k, ckv_new.astype(cache.k.dtype), (zero, cur_len, zero))
+    cr = jax.lax.dynamic_update_slice(
+        cache.v, k_rope_new.astype(cache.v.dtype), (zero, cur_len, zero))
+    new_cache = KVCache(ck, cr)
+
+    w_uk = p["wkv_b"][..., :nope]                       # (latent, H, nope)
+    w_uv = p["wkv_b"][..., nope:]                       # (latent, H, v)
+    # absorb: q_eff (B,1,H,latent)
+    q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk.astype(x.dtype))
+    sco = (jnp.einsum("bshr,bSr->bshS", q_eff.astype(jnp.float32),
+                      ck.astype(jnp.float32)) +
+           jnp.einsum("bshk,bSk->bshS", q_rope.astype(jnp.float32),
+                      cr.astype(jnp.float32)))
+    sco = sco / ((nope + cfg.mla_qk_rope_dim) ** 0.5)
+    mask = jnp.arange(smax) <= cur_len
+    sco = jnp.where(mask[None, None, None], sco, NEG_INF)
+    prob = jax.nn.softmax(sco, axis=-1)
+    ctx = jnp.einsum("bshS,bSr->bshr", prob, ck.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhk->bshk", ctx.astype(x.dtype), w_uv.astype(x.dtype))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), new_cache
+
+
+# --------------------------------------------------------------------------- #
+# cross attention (whisper decoder)
+# --------------------------------------------------------------------------- #
+def cross_schema(cfg, mesh_model: int) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hp = cfg.padded_heads(mesh_model)
+    return {
+        "wq": PSpec((d, hp, hd), ("embed", "heads", None)),
+        "wk": PSpec((d, hp, hd), ("embed", "heads", None)),
+        "wv": PSpec((d, hp, hd), ("embed", "heads", None)),
+        "wo": PSpec((hp, hd, d), ("heads", None, "embed")),
+    }
+
+
+def cross_forward(p, cfg, x, enc_out) -> jax.Array:
+    """Decoder cross-attention over encoder output (no cache needed: enc kv
+    computed on the fly — enc seq is short)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype)).transpose(0, 2, 1, 3)
+    k = jnp.einsum("bsd,dhk->bshk", enc_out.astype(x.dtype),
+                   p["wk"].astype(x.dtype)).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsd,dhk->bshk", enc_out.astype(x.dtype),
+                   p["wv"].astype(x.dtype)).transpose(0, 2, 1, 3)
+    sco = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                     k.astype(jnp.float32)) / (q.shape[-1] ** 0.5)
+    prob = jax.nn.softmax(sco, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", prob, v.astype(jnp.float32))
+    out = out.astype(x.dtype).transpose(0, 2, 1, 3)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))

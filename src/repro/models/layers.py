@@ -1,0 +1,109 @@
+"""Shared model layers (functional JAX; params are plain dict pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .schema import PSpec
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+def norm_schema(cfg) -> dict:
+    if cfg.norm == "layernorm":
+        return {"scale": PSpec((cfg.d_model,), ("embed",), "ones"),
+                "bias": PSpec((cfg.d_model,), ("embed",), "zeros")}
+    return {"scale": PSpec((cfg.d_model,), ("embed",), "ones")}
+
+
+def apply_norm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"] + p["bias"]).astype(x.dtype)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * p["scale"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE (standard + M-RoPE)
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: tuple[int, ...] = ()) -> jax.Array:
+    """x: (B, S, H, D).  positions: (B, S) or (3, B, S) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the D/2 rotary frequencies are split into
+    ``mrope_sections`` (t, h, w); each section uses its own position stream.
+    Text tokens carry identical (t, h, w) positions, so M-RoPE degenerates to
+    standard RoPE for them.
+    """
+    b, s, h, d = x.shape
+    inv = rope_freqs(d, theta)  # (d/2,)
+    if mrope_sections and positions.ndim == 3:
+        assert sum(mrope_sections) == d // 2, (mrope_sections, d)
+        pos_parts = []
+        for i, sec in enumerate(mrope_sections):
+            pos_parts.append(jnp.broadcast_to(positions[i][:, :, None], (b, s, sec)))
+        pos = jnp.concatenate(pos_parts, axis=-1)          # (B, S, d/2)
+        ang = pos.astype(jnp.float32) * inv[None, None, :]
+    else:
+        if positions.ndim == 3:
+            positions = positions[0]
+        ang = positions[:, :, None].astype(jnp.float32) * inv[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]                      # (B, S, 1, d/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# MLP
+# --------------------------------------------------------------------------- #
+def mlp_schema(cfg, d_ff: int | None = None) -> dict:
+    ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    if cfg.act == "swiglu":
+        return {"wi": PSpec((d, ff), ("embed", "ff")),
+                "wg": PSpec((d, ff), ("embed", "ff")),
+                "wo": PSpec((ff, d), ("ff", "embed"))}
+    return {"wi": PSpec((d, ff), ("embed", "ff")),
+            "wo": PSpec((ff, d), ("ff", "embed"))}
+
+
+def apply_mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = x @ p["wi"]
+    if "wg" in p:  # swiglu
+        h = jax.nn.silu(x @ p["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"]
+
+
+# --------------------------------------------------------------------------- #
+# embeddings / head
+# --------------------------------------------------------------------------- #
+def embed_schema(cfg, padded_vocab: int) -> dict:
+    sch = {"tok": PSpec((padded_vocab, cfg.d_model), ("vocab", "embed"), "embed")}
+    if not cfg.tie_embeddings:
+        sch["head"] = PSpec((cfg.d_model, padded_vocab), ("embed", "vocab"))
+    return sch
+
+
+def embed_tokens(p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return p["tok"].astype(dtype)[tokens]
+
+
+def lm_head(p: dict, x: jax.Array) -> jax.Array:
+    w = p.get("head")
+    if w is None:
+        w = p["tok"].T
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)

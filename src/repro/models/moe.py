@@ -1,0 +1,143 @@
+"""Mixture-of-Experts with sort-based dispatch and predicted capacity.
+
+Dispatch is sort-based (megablocks-style, TPU-static): assignments are sorted
+by expert id, each token-slot gets a position-within-expert, and slots beyond
+the expert's static ``capacity`` are dropped.  Cost is O(T·k log T·k) for the
+sort plus O(T·k·d) gathers — no O(T·E·C) one-hot dispatch tensor.
+
+Capacity is where the paper lands in the LM stack (DESIGN §4): the static
+per-expert capacity is the predicted output structure of the token→expert
+dispatch.  ``repro.core.moe_capacity.predict_dispatch_capacity`` supplies it
+from a sampled calibration batch (sampled-CR, eq. 4); the fallback is the
+classic worst-case ``capacity_factor·T·k/E``.
+
+Experts are sharded over `model` (EP); the scatter into the (E, C, d) buffer
+reshards tokens from `data` to `model` — GSPMD emits the all-to-all pair that
+a hand-written EP exchange would.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .schema import PSpec
+from .layers import mlp_schema, apply_mlp
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jax.Array
+    router_z_loss: jax.Array
+    dropped_fraction: jax.Array
+    expert_load: jax.Array         # (E,) fraction of assignments per expert
+
+
+def moe_schema(cfg) -> dict:
+    d, e = cfg.d_model, cfg.moe_num_experts
+    ff = cfg.moe_d_ff or cfg.d_ff
+    sch = {
+        "router": PSpec((d, e), ("embed", "expert")),
+        "wi": PSpec((e, d, ff), ("expert", "embed", "moe_ff")),
+        "wg": PSpec((e, d, ff), ("expert", "embed", "moe_ff")),
+        "wo": PSpec((e, ff, d), ("expert", "moe_ff", "embed")),
+    }
+    if cfg.moe_shared_experts:
+        sch["shared"] = mlp_schema(cfg, d_ff=ff * cfg.moe_shared_experts)
+    return sch
+
+
+def default_capacity(cfg, tokens_per_group: int) -> int:
+    """Worst-case (upper-bound-method analogue) per-group capacity."""
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    cap = int(tokens_per_group * k / e * cfg.moe_capacity_factor)
+    return max(4, -(-cap // 4) * 4)
+
+
+def _dispatch_one_group(xg, gates, ids, e: int, k: int, capacity: int):
+    """Sort-based dispatch for ONE group.  xg (S,d); gates/ids (S,k)."""
+    s, d = xg.shape
+    flat_e = ids.reshape(s * k)
+    flat_t = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)
+    flat_g = gates.reshape(s * k)
+    order = jnp.argsort(flat_e)                                       # stable
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.zeros(e, jnp.int32).at[se].add(1)
+    start = jnp.cumsum(counts) - counts
+    pos = jnp.arange(s * k, dtype=jnp.int32) - start[se]
+    keep = pos < capacity
+    dest = jnp.where(keep, se * capacity + pos, e * capacity)         # drop slot
+    buf = jnp.zeros((e * capacity, d), xg.dtype).at[dest].add(
+        xg[st], mode="drop").reshape(e, capacity, d)
+    return buf, (keep, dest, st, sg, counts)
+
+
+def _combine_one_group(out, dispatch_info, s: int, e: int, capacity: int,
+                       dtype):
+    keep, dest, st, sg, _ = dispatch_info
+    out_flat = out.reshape(e * capacity, -1)
+    contrib = jnp.where(keep[:, None],
+                        out_flat[jnp.minimum(dest, e * capacity - 1)], 0.0)
+    return jnp.zeros((s, out_flat.shape[-1]), dtype).at[st].add(
+        contrib * sg[:, None].astype(dtype))
+
+
+def apply_moe(p, cfg, x, *, capacity: int):
+    """x: (B, S, d) → (y, MoEAux).
+
+    Grouped dispatch: one group per batch row, so the dispatch sort and
+    position bookkeeping stay LOCAL to the `data` shard (S·k-element sorts),
+    and the (G, E, C, d) buffer shards G over `data` and E over `model` —
+    the data↔model reshard between the scatter and the expert einsum is the
+    EP all-to-all pair.  ``capacity`` is per group and static; the paper's
+    predictor supplies it (DESIGN §4), worst-case ``default_capacity`` is the
+    fallback.
+    """
+    b, s, d = x.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)    # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, k)                              # (B,S,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    buf, info = jax.vmap(
+        lambda xg, gg, ii: _dispatch_one_group(xg, gg, ii, e, k, capacity)
+    )(x, gates, ids)                                                  # (B,E,C,d)
+
+    # ---- expert MLPs (E sharded over `model`) ----
+    # pin the intended EP layout explicitly: (G@data, E@model, C, d); the
+    # data→model reshard between scatter and einsum is the EP all-to-all.
+    # Training-scale only: for decode (capacity ≤ a few slots) the buffers
+    # are tiny and pinning forces per-step resharding (measured 14× worse
+    # on deepseek decode_32k — EXPERIMENTS §Perf iteration 5).
+    from .sharding import constrain_spec
+    from jax.sharding import PartitionSpec as P
+    pin = capacity >= 16
+    if pin:
+        buf = constrain_spec(buf, P(("pod", "data"), "model", None, None))
+    h = jnp.einsum("gecd,edf->gecf", buf, p["wi"].astype(x.dtype))
+    g = jnp.einsum("gecd,edf->gecf", buf, p["wg"].astype(x.dtype))
+    h = jax.nn.silu(g) * h
+    if pin:
+        h = constrain_spec(h, P(("pod", "data"), "model", None, None))
+    out = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype))
+    if pin:
+        out = constrain_spec(out, P(("pod", "data"), "model", None, None))
+
+    y = jax.vmap(
+        lambda o, inf: _combine_one_group(o, inf, s, e, capacity, x.dtype)
+    )(out, info)                                                      # (B,S,d)
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], x)
+
+    # ---- aux losses (Switch-style) ----
+    counts = info[4]                                                  # (B,E)
+    frac_assign = counts.sum(0).astype(jnp.float32) / (b * s * k)
+    mean_prob = probs.mean(axis=(0, 1))
+    lb = e * jnp.sum(frac_assign * mean_prob)
+    zl = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    keep = info[0]
+    dropped = 1.0 - keep.astype(jnp.float32).mean()
+    return y, MoEAux(lb, zl, dropped, frac_assign)

@@ -1,0 +1,75 @@
+"""Declarative parameter schema: one source of truth for shapes, logical
+sharding axes, and initialization.
+
+Every model builds a nested dict of ``PSpec`` leaves.  From the same tree we
+derive (a) materialized params (``init_params``), (b) ShapeDtypeStructs for
+the dry-run (``abstract_params``), and (c) ``PartitionSpec`` trees via the
+logical-axis rules in ``repro.models.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """A parameter leaf: shape + logical axes + init style."""
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]      # logical axis names, len == len(shape)
+    init: str = "normal"              # "normal" | "zeros" | "ones" | "embed"
+    scale: float | None = None        # fan-in override for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_init(spec: PSpec, key: jax.Array, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape) * 0.02).astype(dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape) * scale).astype(dtype)
+
+
+def is_pspec(x: Any) -> bool:
+    return isinstance(x, PSpec)
+
+
+def init_params(schema: dict, key: jax.Array, dtype=jnp.float32):
+    """Materialize a schema tree into arrays (deterministic in ``key``)."""
+    leaves, treedef = jax.tree_util.tree_flatten(schema, is_leaf=is_pspec)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_leaf_init(l, k, dtype) for l, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def abstract_params(schema: dict, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — the dry-run path (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, dtype), schema, is_leaf=is_pspec)
+
+
+def logical_axes(schema: dict):
+    """Tree of logical-axis tuples (same structure as params)."""
+    return jax.tree_util.tree_map(lambda l: l.axes, schema, is_leaf=is_pspec)
+
+
+def param_count(schema: dict) -> int:
+    leaves = jax.tree_util.tree_leaves(schema, is_leaf=is_pspec)
+    return int(sum(int(np.prod(l.shape)) for l in leaves))
+
+
+def stack_layers(layer_schema: dict, n: int) -> dict:
+    """Prepend a scan ('layers') axis to every leaf — stacked-layer params."""
+    return jax.tree_util.tree_map(
+        lambda l: PSpec((n,) + l.shape, ("layers",) + l.axes, l.init, l.scale),
+        layer_schema, is_leaf=is_pspec)

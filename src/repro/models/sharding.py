@@ -1,0 +1,176 @@
+"""Logical-axis → mesh-axis rules (DESIGN §7).
+
+Single-pod mesh: (data=16, model=16).  Multi-pod: (pod=2, data=16, model=16)
+— `pod` extends data parallelism; with FSDP the weights/optimizer shard over
+("data","pod") as well (ZeRO-3).
+
+Per-config adjustments:
+  * kv_heads shard over `model` only when divisible (else replicated — their
+    activations are small; the decode cache shards over the sequence axis
+    instead, see attention.py).
+  * FSDP configs shard the `embed` (d_model) dimension of weights over
+    `data`(+`pod`), all-gathered by XLA at use — ZeRO-3 semantics for free.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .schema import logical_axes
+
+
+def _ambient_mesh():
+    try:
+        m = jax.interpreters.pxla.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def constrain_batch(x, *, sharded_tail: dict[int, str] | None = None,
+                    batch_over_model: bool = False):
+    """Pin activation sharding: batch over data(+pod), rest replicated.
+
+    Without this, GSPMD can propagate the FSDP *weight* sharding into the
+    remat-saved activation stacks — replicating batch and sharding d_model
+    over `data` instead (measured: 16× activation traffic on the dense train
+    cells; see EXPERIMENTS.md §Perf iteration 1).  No-op outside a mesh.
+
+    ``sharded_tail``: optional {dim: axis} for extra dims (e.g. vocab logits
+    {2: "model"}).
+    """
+    import os
+    if os.environ.get("REPRO_NO_ACT_CONSTRAINT"):  # hillclimb A/B switch
+        return x
+    m = _ambient_mesh()
+    if m is None:
+        return x
+    names = m.axis_names
+    batch_names = ("pod", "data", "model") if batch_over_model else ("pod", "data")
+    data_axes = tuple(a for a in batch_names if a in names)
+    if not data_axes:
+        return x
+    batch_dim = len(data_axes) == 1 and data_axes[0] or data_axes
+    spec = [None] * x.ndim
+    spec[0] = batch_dim
+    for d, ax in (sharded_tail or {}).items():
+        if ax in names:
+            spec[d] = ax
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def make_rules(cfg, *, mesh_model: int, multi_pod: bool, fsdp: bool | None = None):
+    fsdp = cfg.fsdp if fsdp is None else fsdp
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    if not getattr(cfg, "tensor_parallel", True):
+        # sub-1B archs: replicate weights, DP over (data × model)
+        return {None: None, "layers": None, "vocab": None, "heads": None,
+                "ff": None, "moe_ff": None, "expert": None, "ssm_inner": None,
+                "embed": data_axes if fsdp else None, "kv_heads": None}
+    rules: dict[str | None, object] = {
+        None: None,
+        "layers": None,
+        "vocab": "model",
+        "heads": "model",
+        "ff": "model",
+        "moe_ff": None,            # expert dim already uses `model` (EP)
+        "expert": "model",
+        "ssm_inner": "model",
+        "embed": data_axes if fsdp else None,   # ZeRO-3 weight shard
+        "kv_heads": "model" if cfg.num_kv_heads % mesh_model == 0 else None,
+    }
+    return rules
+
+
+def specs_from_schema(schema, rules) -> object:
+    """PSpec tree → PartitionSpec tree."""
+    axes = logical_axes(schema)
+
+    def to_pspec(ax):
+        return P(*[rules.get(a, None) for a in ax])
+
+    return jax.tree_util.tree_map(to_pspec, axes,
+                                  is_leaf=lambda x: isinstance(x, tuple) and
+                                  all(isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_specs(cfg, shape_kind: str, multi_pod: bool):
+    """Input shardings for a (tokens, ...) batch."""
+    data = ("pod", "data") if multi_pod else "data"
+    specs = {"tokens": P(data, None), "positions": P(None, data, None)
+             if cfg.mrope_sections else P(data, None)}
+    if cfg.frontend == "vision_stub":
+        specs["patch_embeds"] = P(data, None, None)
+    if cfg.frontend == "audio_stub":
+        specs["frame_embeds"] = P(data, None, None)
+    if shape_kind == "train":
+        specs["labels"] = P(data, None)
+    return specs
+
+
+def constrain_spec(x, spec: P):
+    """with_sharding_constraint against the ambient mesh (no-op outside)."""
+    import os
+    if os.environ.get("REPRO_NO_MOE_CONSTRAINT"):
+        return x
+    m = _ambient_mesh()
+    if m is None:
+        return x
+    names = set(m.axis_names)
+
+    def keep(ax):
+        if ax is None:
+            return None
+        if isinstance(ax, tuple):
+            kept = tuple(a for a in ax if a in names)
+            return kept if kept else None
+        return ax if ax in names else None
+
+    return jax.lax.with_sharding_constraint(x, P(*[keep(a) for a in spec]))
+
+
+def cache_spec_tree(cfg, mesh_model: int, multi_pod: bool):
+    """Decode-cache shardings mirroring ``transformer.init_cache``:
+    batch over data(+pod); the attention cache SEQUENCE axis over `model`
+    (flash-decode, no head-divisibility constraint); SSM states over heads /
+    channels where divisible, replicated otherwise (they are small).
+    """
+    from repro.models import transformer as tmod
+    from repro.models import attention as attn_mod
+    from repro.models import ssm as ssm_mod
+
+    data = ("pod", "data") if multi_pod else "data"
+
+    def div(sz):  # shard over model only when the dim divides evenly
+        return "model" if sz % mesh_model == 0 else None
+
+    def kind_spec(kind):
+        if kind in ("attn", "moe"):
+            if cfg.attention_type == "mla":
+                return attn_mod.KVCache(P(None, data, "model", None),
+                                        P(None, data, "model", None))
+            return attn_mod.KVCache(P(None, data, None, "model", None),
+                                    P(None, data, None, "model", None))
+        if kind == "mamba":
+            di, h, p_, n = ssm_mod.mamba_dims(cfg)
+            return ssm_mod.MambaCache(P(None, data, div(h), None, None),
+                                      P(None, data, None, div(di + 2 * n)))
+        if kind == "mlstm":
+            di, h, dk = ssm_mod.mlstm_dims(cfg)
+            return ssm_mod.MLSTMCache(P(None, data, div(h), None, None),
+                                      P(None, data, None, div(di)))
+        if kind == "slstm":
+            h, dh = ssm_mod.slstm_dims(cfg)
+            s = P(None, data, div(h), None)
+            return ssm_mod.SLSTMCache(s, s, s, s)
+        raise ValueError(kind)
+
+    tree: dict = {}
+    for si, seg in enumerate(tmod.segment_plan(cfg)):
+        tree[f"seg{si}"] = {f"pos{j}": kind_spec(k)
+                            for j, k in enumerate(seg.kinds)}
+    if cfg.attn_every:
+        tree["shared_attn"] = attn_mod.KVCache(
+            P(None, data, None, "model", None),
+            P(None, data, None, "model", None))
+    return tree

@@ -1,0 +1,390 @@
+"""SSM / recurrent blocks: Mamba2 (zamba2), mLSTM + sLSTM (xlstm).
+
+One chunked SSD scan (``ssd_chunk_scan``) serves both Mamba2 and mLSTM — they
+share the state-space structure  S_t = a_t·S_{t-1} + dt_t·(B_t ⊗ x_t),
+y_t = C_t·S_t: Mamba2 sets a = exp(dt·A); mLSTM sets (B, C, dt, a) =
+(k, q, i-gate, f-gate) with an extra normalizer channel.  The scan processes
+``chunk``-sized blocks: quadratic intra-chunk attention-form (stable — decay
+differences only inside a chunk) + sequential inter-chunk state carry via
+``lax.scan``, keeping peak memory at O(B·L²·H) per chunk instead of O(B·S²).
+
+Decode paths are exact single-step recurrences over the carried state, so
+long_500k decode is O(1) per token per layer (DESIGN §6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .schema import PSpec
+from .layers import apply_norm
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# shared chunked SSD scan
+# --------------------------------------------------------------------------- #
+def ssd_chunk_scan(xh, dt, bm, cm, da, chunk: int, state0):
+    """xh (B,S,H,P), dt (B,S,H), bm/cm (B,S,H,N), da (B,S,H) = log-decay ≤ 0.
+
+    Returns (y (B,S,H,P) fp32, final_state (B,H,N,P) fp32).
+    """
+    b, s, h, p = xh.shape
+    n = bm.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+
+    def rs(t):  # (B, nc, L, ...) → scan over nc
+        return t.reshape((b, nc) + (chunk,) + t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, bc, cc, dac = rs(xh.astype(jnp.float32)), rs(dt.astype(jnp.float32)), \
+        rs(bm.astype(jnp.float32)), rs(cm.astype(jnp.float32)), rs(da.astype(jnp.float32))
+
+    def step(state, inp):
+        x1, dt1, b1, c1, a1 = inp                       # (B,L,H,P) etc.
+        cum = jnp.cumsum(a1, axis=1)                    # (B,L,H)
+        # intra-chunk: decay[l,m] = exp(cum_l - cum_m), m ≤ l  (stable in-chunk)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,L,M,H)
+        lm = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.exp(jnp.where(lm[None, :, :, None], diff, NEG_INF))
+        cb = jnp.einsum("blhn,bmhn->blmh", c1, b1)      # (B,L,M,H)
+        dtx = dt1[..., None] * x1                       # (B,L,H,P)
+        y_intra = jnp.einsum("blmh,bmhp->blhp", cb * decay, dtx)
+        # inter-chunk: carried state read
+        y_inter = jnp.einsum("blhn,bhnp->blhp", c1, state) * \
+            jnp.exp(cum)[..., None]
+        # state update
+        last = cum[:, -1]                               # (B,H)
+        w = jnp.exp(last[:, None, :] - cum)             # (B,L,H)
+        s_new = state * jnp.exp(last)[:, :, None, None] + \
+            jnp.einsum("blhn,blh,blhp->bhnp", b1, w, dtx)
+        return s_new, y_intra + y_inter
+
+    state_f, ys = jax.lax.scan(step, state0.astype(jnp.float32),
+                               (xc, dtc, bc, cc, dac))
+    y = ys.swapaxes(0, 1).reshape(b, nc * chunk, h, p)[:, :s]
+    return y, state_f
+
+
+def ssd_decode_step(state, x1, dt1, b1, c1, a1):
+    """Single-token recurrence.  x1 (B,H,P), dt1/a1 (B,H), b1/c1 (B,H,N)."""
+    decay = jnp.exp(a1.astype(jnp.float32))
+    s_new = state * decay[:, :, None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhnp", b1.astype(jnp.float32),
+        dt1.astype(jnp.float32), x1.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", c1.astype(jnp.float32), s_new)
+    return y, s_new
+
+
+# --------------------------------------------------------------------------- #
+# causal depthwise conv (width W) + state for decode
+# --------------------------------------------------------------------------- #
+def causal_conv(x, w, b):
+    """x (B,S,C), w (W,C) depthwise, left-padded causal."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1]] * w[i][None, None, :]
+              for i in range(width))
+    return out + b[None, None, :]
+
+
+def causal_conv_step(conv_state, x1, w, b):
+    """conv_state (B, W-1, C); x1 (B, C) → (y (B,C), new_state)."""
+    width = w.shape[0]
+    full = jnp.concatenate([conv_state, x1[:, None, :]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", full, w) + b[None, :]
+    return y, full[:, 1:]
+
+
+# --------------------------------------------------------------------------- #
+# Mamba2 block
+# --------------------------------------------------------------------------- #
+CONV_W = 4
+
+
+class MambaCache(NamedTuple):
+    state: jax.Array       # (B, H, N, P) fp32
+    conv: jax.Array        # (B, CONV_W-1, di + 2N)
+
+
+def mamba_dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    p = cfg.ssm_head_dim
+    h = di // p
+    n = cfg.ssm_state_dim
+    return di, h, p, n
+
+
+def mamba_schema(cfg) -> dict:
+    d = cfg.d_model
+    di, h, p, n = mamba_dims(cfg)
+    cw = di + 2 * n
+    return {
+        "w_in": PSpec((d, 2 * di + 2 * n + h), ("embed", "ssm_inner")),
+        "conv_w": PSpec((CONV_W, cw), (None, None), "normal", 0.2),
+        "conv_b": PSpec((cw,), (None,), "zeros"),
+        "a_log": PSpec((h,), (None,), "zeros"),
+        "dt_bias": PSpec((h,), (None,), "zeros"),
+        "d_skip": PSpec((h,), (None,), "ones"),
+        "norm": {"scale": PSpec((di,), ("ssm_inner",), "ones")},
+        "w_out": PSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mamba_proj(p, cfg, x):
+    di, h, _, n = mamba_dims(cfg)
+    z_xbc_dt = x @ p["w_in"].astype(x.dtype)
+    z = z_xbc_dt[..., :di]
+    xbc = z_xbc_dt[..., di: 2 * di + 2 * n]
+    dt_raw = z_xbc_dt[..., 2 * di + 2 * n:]
+    return z, xbc, dt_raw
+
+
+def _mamba_post(p, cfg, y, z, x_dtype):
+    di, h, pp, _ = mamba_dims(cfg)
+    b = y.shape[0]
+    y = y.reshape(y.shape[:-2] + (di,)).astype(x_dtype)
+    y = apply_norm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["w_out"].astype(x_dtype)
+
+
+def mamba_forward(p, cfg, x):
+    """x (B,S,d) → (B,S,d)."""
+    di, h, pp, n = mamba_dims(cfg)
+    z, xbc, dt_raw = _mamba_proj(p, cfg, x)
+    xbc = jax.nn.silu(causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                  p["conv_b"].astype(x.dtype)))
+    xs, bmat, cmat = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    da = dt * a[None, None, :]
+    bsz, s = x.shape[:2]
+    xh = xs.reshape(bsz, s, h, pp)
+    bm = jnp.broadcast_to(bmat[:, :, None, :], (bsz, s, h, n))
+    cm = jnp.broadcast_to(cmat[:, :, None, :], (bsz, s, h, n))
+    state0 = jnp.zeros((bsz, h, n, pp), jnp.float32)
+    y, _ = ssd_chunk_scan(xh, dt, bm, cm, da, cfg.ssm_chunk, state0)
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    return _mamba_post(p, cfg, y, z, x.dtype)
+
+
+def mamba_decode(p, cfg, x, cache: MambaCache):
+    """x (B,1,d) single step."""
+    di, h, pp, n = mamba_dims(cfg)
+    z, xbc, dt_raw = _mamba_proj(p, cfg, x)
+    xbc1, new_conv = causal_conv_step(cache.conv, xbc[:, 0],
+                                      p["conv_w"].astype(x.dtype),
+                                      p["conv_b"].astype(x.dtype))
+    xbc1 = jax.nn.silu(xbc1)
+    xs, bmat, cmat = xbc1[..., :di], xbc1[..., di:di + n], xbc1[..., di + n:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    da = dt * a[None, :]
+    bsz = x.shape[0]
+    xh = xs.reshape(bsz, h, pp)
+    bm = jnp.broadcast_to(bmat[:, None, :], (bsz, h, n))
+    cm = jnp.broadcast_to(cmat[:, None, :], (bsz, h, n))
+    y, s_new = ssd_decode_step(cache.state, xh, dt, bm, cm, da)
+    y = y + p["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    out = _mamba_post(p, cfg, y[:, None], z, x.dtype)
+    return out, MambaCache(s_new, new_conv)
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> MambaCache:
+    di, h, pp, n = mamba_dims(cfg)
+    return MambaCache(jnp.zeros((batch, h, n, pp), jnp.float32),
+                      jnp.zeros((batch, CONV_W - 1, di + 2 * n), dtype))
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM block (xlstm) — linear attention with exp input / sigmoid forget gate
+# --------------------------------------------------------------------------- #
+class MLSTMCache(NamedTuple):
+    state: jax.Array       # (B, H, DK, DV+1) — last column is the normalizer
+    conv: jax.Array        # (B, CONV_W-1, di)
+
+
+def mlstm_dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    h = cfg.num_heads
+    dk = di // h
+    return di, h, dk
+
+
+def mlstm_schema(cfg) -> dict:
+    d = cfg.d_model
+    di, h, dk = mlstm_dims(cfg)
+    return {
+        "w_up": PSpec((d, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": PSpec((CONV_W, di), (None, None), "normal", 0.2),
+        "conv_b": PSpec((di,), (None,), "zeros"),
+        "wq": PSpec((di, di), ("ssm_inner", None)),
+        "wk": PSpec((di, di), ("ssm_inner", None)),
+        "wv": PSpec((di, di), ("ssm_inner", None)),
+        "w_igate": PSpec((di, h), (None, None), "normal", 0.05),
+        "b_igate": PSpec((h,), (None,), "zeros"),
+        "w_fgate": PSpec((di, h), (None, None), "normal", 0.05),
+        "b_fgate": PSpec((h,), (None,), "ones"),
+        "norm": {"scale": PSpec((di,), ("ssm_inner",), "ones")},
+        "w_down": PSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mlstm_qkvif(p, cfg, x):
+    di, h, dk = mlstm_dims(cfg)
+    up = x @ p["w_up"].astype(x.dtype)
+    xm, z = up[..., :di], up[..., di:]
+    xc = jax.nn.silu(causal_conv(xm, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype)))
+    shp = x.shape[:-1] + (h, dk)
+    q = (xc @ p["wq"].astype(x.dtype)).reshape(shp) / (dk ** 0.5)
+    k = (xc @ p["wk"].astype(x.dtype)).reshape(shp)
+    v = (xm @ p["wv"].astype(x.dtype)).reshape(shp)
+    ig = xc @ p["w_igate"].astype(x.dtype) + p["b_igate"].astype(x.dtype)
+    fg = xc @ p["w_fgate"].astype(x.dtype) + p["b_fgate"].astype(x.dtype)
+    # exponential input gate (clamped for stability), sigmoid forget gate
+    i_gate = jnp.exp(jnp.clip(ig.astype(jnp.float32), -8.0, 8.0))
+    log_f = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    return q, k, v, i_gate, log_f, z, xm
+
+
+def _mlstm_read(y_aug, z, p, cfg, x_dtype):
+    di, h, dk = mlstm_dims(cfg)
+    num, den = y_aug[..., :-1], y_aug[..., -1:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = y.reshape(y.shape[:-2] + (di,)).astype(x_dtype)
+    y = apply_norm(p["norm"], y) * jax.nn.silu(z)
+    return y @ p["w_down"].astype(x_dtype)
+
+
+def mlstm_forward(p, cfg, x):
+    di, h, dk = mlstm_dims(cfg)
+    bsz, s = x.shape[:2]
+    q, k, v, ig, log_f, z, _ = _mlstm_qkvif(p, cfg, x)
+    # augment v with a ones channel → the normalizer recurrence rides along
+    v_aug = jnp.concatenate(
+        [v.astype(jnp.float32), jnp.ones(v.shape[:-1] + (1,), jnp.float32)], -1)
+    state0 = jnp.zeros((bsz, h, dk, dk + 1), jnp.float32)
+    y_aug, _ = ssd_chunk_scan(v_aug, ig, k, q, log_f, cfg.ssm_chunk, state0)
+    return _mlstm_read(y_aug, z, p, cfg, x.dtype)
+
+
+def mlstm_decode(p, cfg, x, cache: MLSTMCache):
+    di, h, dk = mlstm_dims(cfg)
+    bsz = x.shape[0]
+    up = x @ p["w_up"].astype(x.dtype)
+    xm, z = up[..., :di], up[..., di:]
+    xc1, new_conv = causal_conv_step(cache.conv, xm[:, 0],
+                                     p["conv_w"].astype(x.dtype),
+                                     p["conv_b"].astype(x.dtype))
+    xc1 = jax.nn.silu(xc1)
+    q = (xc1 @ p["wq"].astype(x.dtype)).reshape(bsz, h, dk) / (dk ** 0.5)
+    k = (xc1 @ p["wk"].astype(x.dtype)).reshape(bsz, h, dk)
+    v = (xm[:, 0] @ p["wv"].astype(x.dtype)).reshape(bsz, h, dk)
+    ig = jnp.exp(jnp.clip((xc1 @ p["w_igate"].astype(x.dtype) +
+                           p["b_igate"].astype(x.dtype)).astype(jnp.float32), -8, 8))
+    log_f = jax.nn.log_sigmoid((xc1 @ p["w_fgate"].astype(x.dtype) +
+                                p["b_fgate"].astype(x.dtype)).astype(jnp.float32))
+    v_aug = jnp.concatenate([v.astype(jnp.float32),
+                             jnp.ones((bsz, h, 1), jnp.float32)], -1)
+    y_aug, s_new = ssd_decode_step(cache.state, v_aug, ig, k, q, log_f)
+    out = _mlstm_read(y_aug[:, None], z, p, cfg, x.dtype)
+    return out, MLSTMCache(s_new, new_conv)
+
+
+def init_mlstm_cache(cfg, batch: int, dtype) -> MLSTMCache:
+    di, h, dk = mlstm_dims(cfg)
+    return MLSTMCache(jnp.zeros((batch, h, dk, dk + 1), jnp.float32),
+                      jnp.zeros((batch, CONV_W - 1, di), dtype))
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM block (xlstm) — recurrent scalar LSTM with exponential gating
+# --------------------------------------------------------------------------- #
+class SLSTMCache(NamedTuple):
+    c: jax.Array   # (B, H, dh)
+    n: jax.Array
+    m: jax.Array
+    h: jax.Array
+
+
+def slstm_dims(cfg):
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+    return h, dh
+
+
+def slstm_schema(cfg) -> dict:
+    d = cfg.d_model
+    h, dh = slstm_dims(cfg)
+    ffd = max(8, int(d * 4 // 3))
+    return {
+        "w_x": PSpec((d, 4 * d), ("embed", None)),
+        "r_h": PSpec((h, dh, 4 * dh), (None, None, None), "normal", 0.05),
+        "b": PSpec((4 * d,), (None,), "zeros"),
+        "norm": {"scale": PSpec((d,), ("embed",), "ones")},
+        "w_ff1": PSpec((d, ffd), ("embed", "ff")),
+        "w_ff2": PSpec((ffd, d), ("ff", "embed")),
+    }
+
+
+def _slstm_cell(carry: SLSTMCache, gx, r_h):
+    """gx: (B, H, dh, 4) pre-activations from x; recurrent part added here."""
+    c, n, m, hprev = carry
+    rec = jnp.einsum("bhd,hdk->bhk", hprev, r_h).reshape(gx.shape)
+    g = (gx + rec).astype(jnp.float32)
+    gi, gf, gz, go = g[..., 0], g[..., 1], g[..., 2], g[..., 3]
+    m_new = jnp.maximum(gf + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(gf + m - m_new)
+    c_new = f * c + i * jnp.tanh(gz)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+    return SLSTMCache(c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_forward(p, cfg, x):
+    h, dh = slstm_dims(cfg)
+    bsz, s, d = x.shape
+    gx = (x @ p["w_x"].astype(x.dtype)).reshape(bsz, s, h, dh, 4)
+    carry = SLSTMCache(*[jnp.zeros((bsz, h, dh), jnp.float32) for _ in range(3)],
+                       jnp.zeros((bsz, h, dh), jnp.float32))
+    r_h = p["r_h"].astype(jnp.float32)
+
+    def step(c, g):
+        return _slstm_cell(c, g + p["b"].astype(jnp.float32).reshape(h, dh, 4),
+                           r_h)
+
+    _, hs = jax.lax.scan(step, carry, gx.swapaxes(0, 1).astype(jnp.float32))
+    y = hs.swapaxes(0, 1).reshape(bsz, s, d).astype(x.dtype)
+    y = apply_norm(p["norm"], y)
+    return jax.nn.gelu(y @ p["w_ff1"].astype(x.dtype)) @ p["w_ff2"].astype(x.dtype)
+
+
+def slstm_decode(p, cfg, x, cache: SLSTMCache):
+    h, dh = slstm_dims(cfg)
+    bsz, _, d = x.shape
+    gx = (x[:, 0] @ p["w_x"].astype(x.dtype)).reshape(bsz, h, dh, 4)
+    new_cache, h_new = _slstm_cell(
+        cache, gx.astype(jnp.float32) +
+        p["b"].astype(jnp.float32).reshape(h, dh, 4),
+        p["r_h"].astype(jnp.float32))
+    y = h_new.reshape(bsz, 1, d).astype(x.dtype)
+    y = apply_norm(p["norm"], y)
+    out = jax.nn.gelu(y @ p["w_ff1"].astype(x.dtype)) @ p["w_ff2"].astype(x.dtype)
+    return out, new_cache
+
+
+def init_slstm_cache(cfg, batch: int, dtype) -> SLSTMCache:
+    h, dh = slstm_dims(cfg)
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return SLSTMCache(z, z, z, z)

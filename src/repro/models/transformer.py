@@ -1,0 +1,442 @@
+"""Unified model stack for all assigned families.
+
+Layers are grouped into *segments* of identical repeating period (e.g.
+deepseek-v3 = [3×dense] + [58×moe]; xlstm = 3×(mlstm,mlstm,mlstm,slstm));
+each segment's params are stacked over repeats and applied with
+``lax.scan`` — the HLO stays O(period), not O(num_layers), which keeps the
+512-device dry-run compile tractable and lets XLA's scheduler overlap each
+layer's collectives with the next layer's compute.
+
+Public API:
+  build_schema(cfg, mesh_model)                → PSpec tree
+  forward(params, cfg, batch, ...)             → (logits, Aux)     [train]
+  init_cache / prefill / decode_step           → serving
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (norm_schema, apply_norm, mlp_schema, apply_mlp,
+                     embed_schema, embed_tokens, lm_head)
+from .schema import PSpec, stack_layers
+
+
+# --------------------------------------------------------------------------- #
+# segment planning
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class SegmentPlan:
+    kinds: tuple[str, ...]   # block kinds within one period
+    repeats: int             # scan length
+    layer_offset: int        # global index of the segment's first layer
+
+
+def segment_plan(cfg) -> list[SegmentPlan]:
+    if cfg.block_pattern:
+        period = tuple(cfg.block_pattern)
+        assert cfg.num_layers % len(period) == 0, (cfg.num_layers, period)
+        return [SegmentPlan(period, cfg.num_layers // len(period), 0)]
+    if cfg.moe_num_experts:
+        segs = []
+        off = 0
+        if cfg.moe_dense_layers:
+            segs.append(SegmentPlan(("attn",), cfg.moe_dense_layers, 0))
+            off = cfg.moe_dense_layers
+        segs.append(SegmentPlan(("moe",), cfg.num_layers - off, off))
+        return segs
+    return [SegmentPlan(("attn",), cfg.num_layers, 0)]
+
+
+# --------------------------------------------------------------------------- #
+# per-kind block schemas
+# --------------------------------------------------------------------------- #
+def _block_schema(cfg, kind: str, mesh_model: int) -> dict:
+    if kind == "attn":
+        sch = {"ln1": norm_schema(cfg),
+               "attn": attn_mod.attention_schema(cfg, mesh_model)}
+        if cfg.d_ff:
+            sch["ln2"] = norm_schema(cfg)
+            sch["mlp"] = mlp_schema(cfg)
+        return sch
+    if kind == "moe":
+        return {"ln1": norm_schema(cfg),
+                "attn": attn_mod.attention_schema(cfg, mesh_model),
+                "ln2": norm_schema(cfg),
+                "moe": moe_mod.moe_schema(cfg)}
+    if kind == "mamba":
+        return {"ln1": norm_schema(cfg), "mamba": ssm_mod.mamba_schema(cfg)}
+    if kind == "mlstm":
+        return {"ln1": norm_schema(cfg), "mlstm": ssm_mod.mlstm_schema(cfg)}
+    if kind == "slstm":
+        return {"ln1": norm_schema(cfg), "slstm": ssm_mod.slstm_schema(cfg)}
+    raise ValueError(kind)
+
+
+def build_schema(cfg, mesh_model: int = 1) -> dict:
+    pv = cfg.padded_vocab()
+    sch: dict[str, Any] = {"embed": embed_schema(cfg, pv)}
+    for si, seg in enumerate(segment_plan(cfg)):
+        period = {f"pos{j}": _block_schema(cfg, k, mesh_model)
+                  for j, k in enumerate(seg.kinds)}
+        sch[f"seg{si}"] = stack_layers(period, seg.repeats)
+    if cfg.attn_every:  # zamba2 shared attention+MLP block (one weight set)
+        sch["shared_attn"] = {
+            "ln1": norm_schema(cfg),
+            "attn": attn_mod.gqa_schema(cfg, mesh_model),
+            "ln2": norm_schema(cfg),
+            "mlp": mlp_schema(cfg),
+        }
+    if cfg.is_encoder_decoder:
+        enc_period = {"pos0": _block_schema(cfg, "attn", mesh_model)}
+        sch["encoder"] = stack_layers(enc_period, cfg.num_encoder_layers)
+        sch["enc_norm"] = norm_schema(cfg)
+        # decoder blocks get cross attention
+        cross_period = {"pos0": {"ln_x": norm_schema(cfg),
+                                 "cross": attn_mod.cross_schema(cfg, mesh_model)}}
+        sch["cross"] = stack_layers(cross_period, cfg.num_layers)
+    if cfg.mtp_heads:  # deepseek multi-token prediction module
+        sch["mtp"] = {
+            "proj": PSpec((2 * cfg.d_model, cfg.d_model), (None, "embed")),
+            "block": _block_schema(cfg, "attn", mesh_model),
+            "norm": norm_schema(cfg),
+        }
+    sch["final_norm"] = norm_schema(cfg)
+    return sch
+
+
+# --------------------------------------------------------------------------- #
+# block application (training / full-seq)
+# --------------------------------------------------------------------------- #
+class Aux(NamedTuple):
+    moe_lb: jax.Array
+    moe_z: jax.Array
+    moe_dropped: jax.Array
+
+
+def _zero_aux() -> Aux:
+    return Aux(jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+               jnp.zeros((), jnp.float32))
+
+
+def _apply_block(p, cfg, kind, x, positions, aux: Aux, *, causal=True,
+                 capacity=None):
+    if kind in ("attn", "moe"):
+        h = apply_norm(p["ln1"], x)
+        if cfg.attention_type == "mla":
+            a = attn_mod.mla_forward(p["attn"], cfg, h, positions, causal=causal)
+        else:
+            a = attn_mod.gqa_forward(p["attn"], cfg, h, positions, causal=causal)
+        x = x + a
+        if kind == "moe":
+            h = apply_norm(p["ln2"], x)
+            y, maux = moe_mod.apply_moe(p["moe"], cfg, h, capacity=capacity)
+            x = x + y
+            aux = Aux(aux.moe_lb + maux.load_balance_loss,
+                      aux.moe_z + maux.router_z_loss,
+                      aux.moe_dropped + maux.dropped_fraction)
+        elif cfg.d_ff:
+            h = apply_norm(p["ln2"], x)
+            x = x + apply_mlp(p["mlp"], h)
+        return x, aux
+    if kind == "mamba":
+        return x + ssm_mod.mamba_forward(p["mamba"], cfg, apply_norm(p["ln1"], x)), aux
+    if kind == "mlstm":
+        return x + ssm_mod.mlstm_forward(p["mlstm"], cfg, apply_norm(p["ln1"], x)), aux
+    if kind == "slstm":
+        return x + ssm_mod.slstm_forward(p["slstm"], cfg, apply_norm(p["ln1"], x)), aux
+    raise ValueError(kind)
+
+
+def _apply_shared_attn(p, cfg, x, positions, *, window: int = 0):
+    h = apply_norm(p["ln1"], x)
+    x = x + attn_mod.gqa_forward(p["attn"], cfg, h, positions, causal=True,
+                                 window=window)
+    h = apply_norm(p["ln2"], x)
+    return x + apply_mlp(p["mlp"], h)
+
+
+def _remat_wrap(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _run_segments(params, cfg, x, positions, aux, *, capacity, causal=True):
+    from .sharding import constrain_batch
+    for si, seg in enumerate(segment_plan(cfg)):
+        seg_params = params[f"seg{si}"]
+
+        def body(carry, inp):
+            xx, aux_c = carry
+            layer_p, rep_idx = inp
+            xx = constrain_batch(
+                xx, batch_over_model=not cfg.tensor_parallel)  # pin saved stack
+            for j, kind in enumerate(seg.kinds):
+                xx, aux_c = _apply_block(layer_p[f"pos{j}"], cfg, kind, xx,
+                                         positions, aux_c, causal=causal,
+                                         capacity=capacity)
+                if cfg.attn_every:
+                    gidx = seg.layer_offset + rep_idx * len(seg.kinds) + j
+                    xx = jax.lax.cond(
+                        (gidx + 1) % cfg.attn_every == 0,
+                        lambda v: _apply_shared_attn(
+                            params["shared_attn"], cfg, v, positions),
+                        lambda v: v, xx)
+            return (xx, aux_c), None
+
+        body = _remat_wrap(cfg, body)
+        (x, aux), _ = jax.lax.scan(
+            body, (x, aux), (seg_params, jnp.arange(seg.repeats)))
+    return x, aux
+
+
+# --------------------------------------------------------------------------- #
+# encoder (whisper)
+# --------------------------------------------------------------------------- #
+def _run_encoder(params, cfg, frame_embeds):
+    from .sharding import constrain_batch
+    x = frame_embeds
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32)[None],
+                           x.shape[:2])
+
+    def body(xx, layer_p):
+        xx = constrain_batch(xx, batch_over_model=not cfg.tensor_parallel)
+        xx, _ = _apply_block(layer_p["pos0"], cfg, "attn", xx, pos,
+                             _zero_aux(), causal=False)
+        return xx, None
+
+    x, _ = jax.lax.scan(_remat_wrap(cfg, body), x, params["encoder"])
+    return apply_norm(params["enc_norm"], x)
+
+
+def _run_cross(params, cfg, x, enc_out, layer_slice):
+    """Apply the stacked cross-attention for decoder layer ``layer_slice``."""
+    p = jax.tree_util.tree_map(lambda a: a[layer_slice], params["cross"])
+    h = apply_norm(p["pos0"]["ln_x"], x)
+    return x + attn_mod.cross_forward(p["pos0"]["cross"], cfg, h, enc_out)
+
+
+# --------------------------------------------------------------------------- #
+# training / full-sequence forward
+# --------------------------------------------------------------------------- #
+def forward(params, cfg, batch, *, capacity: int | None = None):
+    """batch: tokens (B,S) [+ positions, patch_embeds, frame_embeds].
+
+    Returns (logits (B,S,V_padded) fp32, Aux).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(tokens.shape[1], dtype=jnp.int32)[None], tokens.shape)
+    from .sharding import constrain_batch
+    x = constrain_batch(embed_tokens(params["embed"], tokens, dtype),
+                        batch_over_model=not cfg.tensor_parallel)
+    if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+        # early fusion: precomputed patch embeddings replace the first P slots
+        pe = batch["patch_embeds"].astype(dtype)
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+    if capacity is None and cfg.moe_num_experts:
+        # per-group (= per batch row) capacity
+        capacity = moe_mod.default_capacity(cfg, tokens.shape[1])
+    aux = _zero_aux()
+
+    if cfg.is_encoder_decoder:
+        enc_out = _run_encoder(params, cfg, batch["frame_embeds"].astype(dtype))
+        # decoder: interleave self-attn blocks with cross-attn — run per layer
+        seg = segment_plan(cfg)[0]
+
+        def body(carry, inp):
+            xx, aux_c = carry
+            layer_p, cross_p, rep_idx = inp
+            xx = constrain_batch(
+                xx, batch_over_model=not cfg.tensor_parallel)
+            xx, aux_c = _apply_block(layer_p["pos0"], cfg, "attn", xx,
+                                     positions, aux_c, causal=True,
+                                     capacity=capacity)
+            h = apply_norm(cross_p["pos0"]["ln_x"], xx)
+            xx = xx + attn_mod.cross_forward(cross_p["pos0"]["cross"], cfg, h,
+                                             enc_out)
+            return (xx, aux_c), None
+
+        (x, aux), _ = jax.lax.scan(
+            _remat_wrap(cfg, body), (x, aux),
+            (params["seg0"], params["cross"], jnp.arange(seg.repeats)))
+    else:
+        x, aux = _run_segments(params, cfg, x, positions, aux,
+                               capacity=capacity)
+
+    x = apply_norm(params["final_norm"], x)
+    # vocab stays `model`-sharded through the CE (logsumexp → all-reduce)
+    logits = constrain_batch(
+        lm_head(params["embed"], x),
+        sharded_tail={2: "model"} if cfg.tensor_parallel else None,
+        batch_over_model=not cfg.tensor_parallel)
+
+    if cfg.mtp_heads:  # deepseek MTP: predict t+2 from [h_t ; emb(t+1)]
+        emb_next = embed_tokens(params["embed"],
+                                jnp.roll(tokens, -1, axis=1), dtype)
+        h_mtp = jnp.concatenate([x.astype(dtype), emb_next], axis=-1)
+        h_mtp = h_mtp @ params["mtp"]["proj"].astype(dtype)
+        h_mtp, _ = _apply_block(params["mtp"]["block"], cfg, "attn", h_mtp,
+                                positions, _zero_aux(), capacity=capacity)
+        h_mtp = apply_norm(params["mtp"]["norm"], h_mtp)
+        mtp_logits = lm_head(params["embed"], h_mtp)
+        return logits, aux, mtp_logits
+    return logits, aux, None
+
+
+# --------------------------------------------------------------------------- #
+# serving: cache init / prefill / decode
+# --------------------------------------------------------------------------- #
+def _block_cache(cfg, kind, batch, max_len, dtype, mesh_model=1):
+    if kind in ("attn", "moe"):
+        if cfg.attention_type == "mla":
+            return attn_mod.init_mla_cache(cfg, batch, max_len, dtype)
+        return attn_mod.init_gqa_cache(cfg, batch, max_len, dtype, mesh_model)
+    if kind == "mamba":
+        return ssm_mod.init_mamba_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return ssm_mod.init_mlstm_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return ssm_mod.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch: int, max_len: int, mesh_model: int = 1):
+    """Stacked-over-repeats cache pytree mirroring the segment structure."""
+    dtype = jnp.dtype(cfg.dtype)
+    cache: dict[str, Any] = {}
+    eff_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    for si, seg in enumerate(segment_plan(cfg)):
+        period = {}
+        for j, kind in enumerate(seg.kinds):
+            c = _block_cache(cfg, kind, batch, eff_len if kind in ("attn", "moe")
+                             else max_len, dtype, mesh_model)
+            period[f"pos{j}"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (seg.repeats,) + a.shape), c)
+        cache[f"seg{si}"] = period
+    if cfg.attn_every:
+        n_shared = sum(1 for i in range(cfg.num_layers)
+                       if (i + 1) % cfg.attn_every == 0)
+        c = attn_mod.init_gqa_cache(cfg, batch, eff_len, dtype, mesh_model)
+        cache["shared_attn"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n_shared,) + a.shape), c)
+    return cache
+
+
+def _decode_block(p, cfg, kind, x, positions, cache, cur_len, *, window=0):
+    if kind in ("attn", "moe"):
+        h = apply_norm(p["ln1"], x)
+        if cfg.attention_type == "mla":
+            a, cache = attn_mod.mla_decode(p["attn"], cfg, h, positions, cache,
+                                           cur_len)
+        else:
+            a, cache = attn_mod.gqa_decode(p["attn"], cfg, h, positions, cache,
+                                           cur_len, window=window)
+        x = x + a
+        if kind == "moe":
+            h = apply_norm(p["ln2"], x)
+            # decode: groups of one token → k distinct experts, ≤1 slot each
+            y, _ = moe_mod.apply_moe(p["moe"], cfg, h, capacity=4)
+            x = x + y
+        elif cfg.d_ff:
+            x = x + apply_mlp(p["mlp"], apply_norm(p["ln2"], x))
+        return x, cache
+    if kind == "mamba":
+        y, cache = ssm_mod.mamba_decode(p["mamba"], cfg,
+                                        apply_norm(p["ln1"], x), cache)
+        return x + y, cache
+    if kind == "mlstm":
+        y, cache = ssm_mod.mlstm_decode(p["mlstm"], cfg,
+                                        apply_norm(p["ln1"], x), cache)
+        return x + y, cache
+    if kind == "slstm":
+        y, cache = ssm_mod.slstm_decode(p["slstm"], cfg,
+                                        apply_norm(p["ln1"], x), cache)
+        return x + y, cache
+    raise ValueError(kind)
+
+
+def decode_step(params, cfg, tokens, cache, cur_len, *, enc_out=None):
+    """One-token decode.  tokens (B, 1); cur_len scalar int32 (current cache
+    fill).  Returns (logits (B,1,V) fp32, new cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    positions = jnp.broadcast_to(cur_len.astype(jnp.int32), (b, 1))
+    x = embed_tokens(params["embed"], tokens, dtype)
+    window = cfg.sliding_window
+    shared_ct = 0
+    new_cache: dict[str, Any] = {}
+    for si, seg in enumerate(segment_plan(cfg)):
+        seg_params = params[f"seg{si}"]
+        seg_cache = cache[f"seg{si}"]
+        shared_p = params.get("shared_attn")
+        use_shared = cfg.attn_every and shared_p is not None
+
+        if use_shared or cfg.is_encoder_decoder:
+            # unrolled per-repeat (shared-attn interleave / cross attention)
+            period_caches = []
+            for r in range(seg.repeats):
+                layer_p = jax.tree_util.tree_map(lambda a: a[r], seg_params)
+                rep_cache = jax.tree_util.tree_map(lambda a: a[r], seg_cache)
+                pc = {}
+                for j, kind in enumerate(seg.kinds):
+                    x, c = _decode_block(layer_p[f"pos{j}"], cfg, kind, x,
+                                         positions, rep_cache[f"pos{j}"],
+                                         cur_len, window=window)
+                    pc[f"pos{j}"] = c
+                    gidx = seg.layer_offset + r * len(seg.kinds) + j
+                    if use_shared and (gidx + 1) % cfg.attn_every == 0:
+                        sc = jax.tree_util.tree_map(
+                            lambda a: a[shared_ct], cache["shared_attn"])
+                        h = apply_norm(shared_p["ln1"], x)
+                        a, sc = attn_mod.gqa_decode(shared_p["attn"], cfg, h,
+                                                    positions, sc, cur_len,
+                                                    window=window)
+                        x = x + a
+                        x = x + apply_mlp(shared_p["mlp"],
+                                          apply_norm(shared_p["ln2"], x))
+                        new_cache.setdefault("shared_attn_list", []).append(sc)
+                        shared_ct += 1
+                    if cfg.is_encoder_decoder and enc_out is not None:
+                        cross_p = jax.tree_util.tree_map(
+                            lambda a: a[r], params["cross"])
+                        h = apply_norm(cross_p["pos0"]["ln_x"], x)
+                        x = x + attn_mod.cross_forward(
+                            cross_p["pos0"]["cross"], cfg, h, enc_out)
+                period_caches.append(pc)
+            new_cache[f"seg{si}"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *period_caches)
+        else:
+            def body(carry, inp):
+                xx, _ = carry
+                layer_p, rep_cache = inp
+                pc = {}
+                for j, kind in enumerate(seg.kinds):
+                    xx, c = _decode_block(layer_p[f"pos{j}"], cfg, kind, xx,
+                                          positions, rep_cache[f"pos{j}"],
+                                          cur_len, window=window)
+                    pc[f"pos{j}"] = c
+                return (xx, carry[1]), pc
+
+            (x, _), stacked = jax.lax.scan(body, (x, jnp.zeros(())),
+                                           (seg_params, seg_cache))
+            new_cache[f"seg{si}"] = stacked
+    if "shared_attn_list" in new_cache:
+        lst = new_cache.pop("shared_attn_list")
+        new_cache["shared_attn"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *lst)
+    x = apply_norm(params["final_norm"], x)
+    return lm_head(params["embed"], x), new_cache

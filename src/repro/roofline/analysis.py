@@ -1,0 +1,120 @@
+"""Three-term roofline from a compiled dry-run artifact (DESIGN §8).
+
+  compute   = flops_per_chip / PEAK_FLOPS
+  memory    = hbm_bytes_per_chip / HBM_BW
+  collective= collective_bytes_per_chip / LINK_BW
+
+The SPMD-partitioned HLO is a per-device program, so ``cost_analysis()``
+numbers and collective operand shapes are already per-chip; the prompt's
+"global / chips" formulation is identical.
+
+collective_bytes is parsed from the partitioned HLO text: the summed operand
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (fusion-wrapped instances included).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+# TPU v5e-class constants (per chip) from the assignment.
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-reduce.5 = f32[16,4096]{1,0} all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+# tuple-typed collectives:  = (f32[..], f32[..]) all-to-all(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind output bytes in the (per-device) HLO module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:   # async pair: count only the start
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            shapes, kind = m.groups()
+            for dt, dd in _SHAPE_RE.findall(shapes):
+                out[kind] += _shape_bytes(dt, dd)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_breakdown: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float            # 6·N·D (or 6·N_active·D)
+    useful_flops_ratio: float     # model_flops/chips / hlo flops_per_chip
+
+    @staticmethod
+    def build(flops_per_chip: float, hbm_bytes_per_chip: float,
+              coll: dict[str, int], model_flops: float, chips: int):
+        cb = float(sum(coll.values()))
+        c = flops_per_chip / PEAK_FLOPS
+        m = hbm_bytes_per_chip / HBM_BW
+        k = cb / LINK_BW
+        terms = {"compute": c, "memory": m, "collective": k}
+        bn = max(terms, key=terms.get)
+        ratio = (model_flops / chips) / flops_per_chip if flops_per_chip else 0.0
+        return Roofline(flops_per_chip, hbm_bytes_per_chip, cb, coll,
+                        c, m, k, bn, model_flops, ratio)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6·N_active·D for one optimizer step over ``tokens`` tokens."""
+    n = cfg.active_param_count_estimate()
+    return 6.0 * n * tokens
+
+
+def model_flops_decode(cfg, batch: int) -> float:
+    """2·N_active per generated token (forward only) + attention reads."""
+    n = cfg.active_param_count_estimate()
+    return 2.0 * n * batch
+
+
+def model_flops_prefill(cfg, tokens: int) -> float:
+    return 2.0 * cfg.active_param_count_estimate() * tokens

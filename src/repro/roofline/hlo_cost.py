@@ -1,0 +1,316 @@
+"""Trip-count-aware cost model over the partitioned HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE — under a
+scan-over-layers model that undercounts flops/bytes/collectives by the layer
+count (verified on this backend; see EXPERIMENTS.md §Dry-run).  This module
+re-derives the three roofline inputs from ``compiled.as_text()`` with loop
+awareness:
+
+  * the module is split into named computations,
+  * a symbol table maps every instruction name → shape,
+  * per computation we count dot flops (2·|out|·contracted), HBM bytes
+    (operands + outputs of top-level instructions — fusion-internal traffic
+    excluded, matching the classic bytes-accessed model), and collective
+    operand bytes,
+  * the call graph is walked from ENTRY: fusion/call = 1×, while = trip×
+    (trip = the loop-bound constant in the condition computation),
+    conditional = max over branches.
+
+It is a *model* (elementwise flops inside fusions are not counted — matmul
+flops dominate every cell here), reported next to the raw cost_analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*\{$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+    r"(\(.*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+([\w\-]+)\(")
+_SHAPES = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERANDS = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_CALLS = re.compile(r"calls=%([\w\.\-]+)")
+_BODY = re.compile(r"body=%([\w\.\-]+)")
+_CONDITION = re.compile(r"condition=%([\w\.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r'known_trip_count..:..n.:.(\d+)')
+_CONST = re.compile(r"constant\((\d+)\)")
+_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_list(type_str: str):
+    return [(dt, [int(x) for x in dims.split(",") if x])
+            for dt, dims in _SHAPES.findall(type_str)]
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+
+
+def _parse_computations(hlo: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    cur = None
+    entry_alias = None
+    for line in hlo.splitlines():
+        s = line.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(s)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry_alias = cur
+            continue
+        if s.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(s)
+        if not m:
+            continue
+        name, type_str, opcode = m.groups()
+        comps[cur].append(Instr(name, type_str, opcode, s))
+    if entry_alias:
+        comps["__entry__"] = comps[entry_alias]
+    return comps
+
+
+def _symbol_table(comps) -> dict[str, str]:
+    return {i.name: i.type_str for instrs in comps.values() for i in instrs}
+
+
+_SKIP_BYTES = {"parameter", "get-tuple-element", "tuple", "constant",
+               "bitcast", "while", "conditional", "call", "after-all",
+               "iota", "get-dimension-size"}
+
+
+def _operands_of(it: Instr) -> list[str]:
+    i = it.rest.find(it.opcode + "(")
+    if i < 0:
+        return []
+    m = _OPERANDS.match(it.rest[i + len(it.opcode):])
+    if not m:
+        return []
+    return [x.strip().lstrip("%") for x in m.group(1).split(",") if x.strip()]
+
+
+_SLICE_OPS = {"dynamic-slice", "gather", "slice"}
+
+
+def _fusion_operand_bytes(fused_instrs):
+    """HBM bytes a fusion reads from its operands.
+
+    An operand whose only in-fusion consumers are dynamic-slice / gather /
+    slice / dynamic-update-slice(target) contributes the SLICE bytes, not the
+    full array: scan bodies dynamic-slice one layer out of stacked weights,
+    and remat stacks are written in place via dus — counting the stack per
+    iteration would overcount by the layer count.
+    """
+    params = {}
+    for it in fused_instrs:
+        if it.opcode == "parameter":
+            params[it.name] = it.type_str
+    consumers = {p: [] for p in params}
+    for it in fused_instrs:
+        if it.opcode == "parameter":
+            continue
+        for p in consumers:
+            if "%" + p in it.rest:
+                consumers[p].append(it)
+    total = 0
+    for p, ptype in params.items():
+        cons = consumers[p]
+        sliced = 0
+        ok = bool(cons)
+        for c in cons:
+            if c.opcode in _SLICE_OPS:
+                sliced += _bytes_of(c.type_str)
+            elif c.opcode == "dynamic-update-slice":
+                ops = _operands_of(c)
+                if ops and ops[0] == p:
+                    continue  # dus target: pure overwrite, no read
+                ok = False
+                break
+            else:
+                ok = False
+                break
+        total += sliced if ok else _bytes_of(ptype)
+    return total
+
+
+_PASSTHRU = {"bitcast", "copy", "reshape", "transpose", "tuple",
+             "get-tuple-element", "convert"}
+
+
+def _fusion_output_bytes(fused_instrs, out_type):
+    """HBM bytes a fusion writes.  If the ROOT (through bitcast/copy chains)
+    is a dynamic-update-slice of a pass-through parameter (in-place remat
+    stack / KV-cache write under buffer aliasing), the true write is the
+    UPDATE slice, not the whole buffer."""
+    by_name = {it.name: it for it in fused_instrs}
+    root = None
+    for it in fused_instrs:
+        if it.rest.lstrip().startswith("ROOT"):
+            root = it
+    hops = 0
+    while root is not None and root.opcode in _PASSTHRU and hops < 8:
+        ops = _operands_of(root)
+        root = by_name.get(ops[0]) if ops else None
+        hops += 1
+    if root is not None and root.opcode == "dynamic-update-slice":
+        ops = _operands_of(root)
+        if len(ops) >= 2:
+            upd = by_name.get(ops[1])
+            if upd is not None:
+                return _bytes_of(upd.type_str)
+    return _bytes_of(out_type)
+
+
+def _comp_costs(instrs, symbols, comps):
+    """Local (non-recursive) flops / bytes / collective bytes + child calls."""
+    flops = 0.0
+    bytes_acc = 0.0
+    coll = defaultdict(float)
+    children = []  # (kind, names_or_pairs, instr)
+    for it in instrs:
+        op = it.opcode
+        if op == "dot":
+            out_n = 1
+            for _, dims in _shape_list(it.type_str):
+                for d in dims:
+                    out_n *= d
+            m = _CDIMS.search(it.rest)
+            csize = 1
+            if m:
+                ops = _operands_of(it)
+                lhs_type = symbols.get(ops[0], "") if ops else ""
+                lhs_shapes = _shape_list(lhs_type)
+                if lhs_shapes:
+                    dims = lhs_shapes[0][1]
+                    for ci in (int(x) for x in m.group(1).split(",") if x):
+                        if ci < len(dims):
+                            csize *= dims[ci]
+            flops += 2.0 * out_n * csize
+        base = op.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            coll[base] += _bytes_of(it.type_str)
+        if op == "while":
+            body = _BODY.search(it.rest)
+            cond = _CONDITION.search(it.rest)
+            trip_m = _TRIP.search(it.rest)
+            trip = int(trip_m.group(1)) if trip_m else None
+            children.append(("while",
+                             (body.group(1) if body else None,
+                              cond.group(1) if cond else None, trip), it))
+        elif op == "conditional":
+            b = _BRANCHES.search(it.rest)
+            names = [x.strip().lstrip("%") for x in b.group(1).split(",")] if b else []
+            children.append(("cond", names, it))
+        else:
+            names = _CALLS.findall(it.rest) + _TO_APPLY.findall(it.rest)
+            if names:
+                # reductions' tiny scalar to_apply bodies are negligible; only
+                # walk fusions/calls whose bodies may contain dots/collectives
+                if op in ("fusion", "call", "custom-call"):
+                    children.append(("call", names, it))
+        if op == "fusion":
+            m = _CALLS.findall(it.rest)
+            fused = comps.get(m[0], []) if m else []
+            bytes_acc += _fusion_output_bytes(fused, it.type_str)
+            if fused:
+                bytes_acc += _fusion_operand_bytes(fused)
+            else:
+                for nm in _operands_of(it):
+                    if nm in symbols:
+                        bytes_acc += _bytes_of(symbols[nm])
+        elif op == "dynamic-update-slice":
+            ops_ = _operands_of(it)
+            upd = symbols.get(ops_[1], "") if len(ops_) >= 2 else ""
+            bytes_acc += 2 * _bytes_of(upd) if upd else _bytes_of(it.type_str)
+        elif op not in _SKIP_BYTES:
+            bytes_acc += _bytes_of(it.type_str)
+    return flops, bytes_acc, dict(coll), children
+
+
+def _trip_count(cond_instrs) -> int:
+    best = 1
+    for it in cond_instrs:
+        for c in _CONST.findall(it.rest):
+            best = max(best, int(c))
+    return best
+
+
+def analyze(hlo: str) -> dict:
+    comps = _parse_computations(hlo)
+    symbols = _symbol_table(comps)
+    local = {name: _comp_costs(instrs, symbols, comps)
+             for name, instrs in comps.items()}
+    memo: dict[str, tuple] = {}
+
+    def total(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        if name not in local or depth > 64:
+            return 0.0, 0.0, {}
+        fl, by, co, children = local[name]
+        co = dict(co)
+        for kind, names, it in children:
+            if kind == "while":
+                body, cond, trip = names
+                if trip is None:
+                    trip = _trip_count(comps.get(cond, [])) if cond else 1
+                bf, bb, bc = total(body, depth + 1) if body else (0, 0, {})
+                fl += trip * bf
+                by += trip * bb
+                for k, v in bc.items():
+                    co[k] = co.get(k, 0) + trip * v
+            elif kind == "cond":
+                branch_costs = [total(n, depth + 1) for n in names]
+                if branch_costs:
+                    bf = max(b[0] for b in branch_costs)
+                    bi = max(range(len(branch_costs)),
+                             key=lambda i: branch_costs[i][0])
+                    fl += bf
+                    by += branch_costs[bi][1]
+                    for k, v in branch_costs[bi][2].items():
+                        co[k] = co.get(k, 0) + v
+            else:
+                # fusion/call: flops and collectives propagate; internal
+                # bytes are register/VMEM traffic, not HBM — excluded
+                # (the caller counted the fusion's operand/output bytes).
+                for nm in names:
+                    cf, _cb, cc = total(nm, depth + 1)
+                    fl += cf
+                    for k, v in cc.items():
+                        co[k] = co.get(k, 0) + v
+        memo[name] = (fl, by, co)
+        return memo[name]
+
+    fl, by, co = total("__entry__")
+    return {"flops": fl, "bytes": by, "collectives": co,
+            "collective_bytes": float(sum(co.values()))}

@@ -1,0 +1,45 @@
+"""Markdown report generator for EXPERIMENTS.md tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def roofline_table(dryrun_dir: str, mesh: str = "single") -> str:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(dryrun_dir, f"*__{mesh}.json"))):
+        r = json.load(open(p))
+        rl = r["roofline"]
+        dom = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        frac = rl["compute_s"] / dom if dom else 0.0
+        rows.append((r["arch"], r["shape"], rl, frac,
+                     r["memory_analysis"].get("temp_size", 0)))
+    out = ["| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+           "| useful FLOPs (6ND/HLO) | roofline frac | temp GB/chip |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for arch, shape, rl, frac, temp in rows:
+        out.append(
+            f"| {arch} | {shape} | {rl['compute_s']:.3f} | {rl['memory_s']:.3f}"
+            f" | {rl['collective_s']:.3f} | {rl['bottleneck']} |"
+            f" {rl['useful_flops_ratio']:.2f} | {frac:.3f} |"
+            f" {temp/2**30:.1f} |")
+    return "\n".join(out)
+
+
+def dryrun_summary(dryrun_dir: str) -> str:
+    n = {"single": 0, "multi": 0}
+    comp = []
+    for p in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        r = json.load(open(p))
+        n[r["mesh"]] += 1
+        comp.append(r.get("compile_s", 0))
+    return (f"{n['single']} single-pod + {n['multi']} multi-pod cells "
+            f"compiled; median compile {sorted(comp)[len(comp)//2]:.0f}s")
+
+
+if __name__ == "__main__":
+    d = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                     "artifacts", "dryrun")
+    print(dryrun_summary(d))
+    print(roofline_table(d, "single"))

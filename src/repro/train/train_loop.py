@@ -1,0 +1,93 @@
+"""Loss, train_step factory, and the host-side training loop.
+
+The train_step is a pure function (params, opt_state, batch) → (params,
+opt_state, metrics) suitable for ``jax.jit`` with explicit in/out shardings —
+the same function the 512-device dry-run lowers.  Gradient accumulation uses
+``lax.scan`` over microbatches (sequential, activation-memory bounded).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tmod
+from . import optimizer as opt_mod
+
+MOE_LB_WEIGHT = 0.01
+MOE_Z_WEIGHT = 1e-3
+MTP_WEIGHT = 0.3
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  valid: jax.Array | None = None) -> jax.Array:
+    """Mean CE over valid positions; logits fp32 (B,S,Vp), labels (B,S)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    ce = lse - gold
+    if valid is None:
+        valid = jnp.ones_like(ce, dtype=jnp.bool_)
+    denom = jnp.maximum(valid.sum(), 1)
+    return jnp.where(valid, ce, 0.0).sum() / denom
+
+
+def loss_fn(params, cfg, batch, *, capacity: int | None = None):
+    logits, aux, mtp_logits = tmod.forward(params, cfg, batch,
+                                           capacity=capacity)
+    labels = batch["labels"]
+    valid = labels >= 0
+    labels = jnp.maximum(labels, 0)
+    ce = cross_entropy(logits, labels, valid)
+    loss = ce + MOE_LB_WEIGHT * aux.moe_lb + MOE_Z_WEIGHT * aux.moe_z
+    metrics = {"ce": ce, "moe_lb": aux.moe_lb, "moe_dropped": aux.moe_dropped}
+    if mtp_logits is not None:  # deepseek MTP: position i predicts token i+2
+        labels2 = jnp.roll(labels, -1, axis=1)
+        valid2 = valid & (jnp.arange(labels.shape[1]) < labels.shape[1] - 1)
+        mtp_ce = cross_entropy(mtp_logits, labels2, valid2)
+        loss = loss + MTP_WEIGHT * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(cfg, opt_cfg: opt_mod.AdamWConfig, *,
+                    capacity: int | None = None, accum: int = 1):
+    """Returns train_step(params, opt_state, batch)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, capacity=capacity),
+            has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, msum = carry
+                (_, m), g = grads_of(params, mb)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                msum = jax.tree_util.tree_map(jnp.add, msum, m)
+                return (acc, msum), None
+
+            mb0 = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (_, m0), g0 = grads_of(params, jax.tree_util.tree_map(
+                lambda x: x[0], mb0))
+            (grads, msum), _ = jax.lax.scan(
+                micro, (g0, m0),
+                jax.tree_util.tree_map(lambda x: x[1:], mb0))
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m / accum, msum)
+        new_params, new_state, om = opt_mod.apply_updates(
+            opt_cfg, grads, opt_state, params)
+        metrics.update(om)
+        return new_params, new_state, metrics
+
+    return train_step

@@ -1,0 +1,71 @@
+"""Mini dry-run: the production lowering path on 8 placeholder devices.
+
+Runs in a SUBPROCESS because the 8-device XLA_FLAGS must be set before jax
+initializes — the main test process keeps its single device (conftest).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_smoke_config
+from repro.models import transformer as tmod
+from repro.models.schema import abstract_params
+from repro.models.sharding import make_rules, specs_from_schema
+from repro.train import optimizer as opt_mod
+from repro.train.train_loop import make_train_step
+from repro.roofline import hlo_cost
+
+assert len(jax.devices()) == 8, jax.devices()
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = get_smoke_config("deepseek-v3-671b")      # MLA + MoE: hardest wiring
+schema = tmod.build_schema(cfg, mesh_model=4)
+rules = make_rules(cfg, mesh_model=4, multi_pod=False, fsdp=True)
+pspecs = specs_from_schema(schema, rules)
+params_abs = abstract_params(schema, dtype=jnp.float32)
+sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+oc = opt_mod.AdamWConfig()
+opt_abs = jax.eval_shape(lambda p: opt_mod.init_state(oc, p), params_abs)
+batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+         "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+bsh = {"tokens": NamedSharding(mesh, P("data", None)),
+       "labels": NamedSharding(mesh, P("data", None))}
+step = make_train_step(cfg, oc)
+with mesh:
+    lowered = jax.jit(step, in_shardings=(sh, None, bsh),
+                      out_shardings=(sh, None, None)).lower(
+        params_abs, opt_abs, batch)
+compiled = lowered.compile()
+mem = compiled.memory_analysis()
+parsed = hlo_cost.analyze(compiled.as_text())
+print(json.dumps(dict(ok=True, flops=parsed["flops"],
+                      coll=parsed["collective_bytes"],
+                      temp=mem.temp_size_in_bytes)))
+"""
+
+
+@pytest.mark.slow
+def test_mini_dryrun_8_devices():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"]
+    assert rec["flops"] > 0
+    assert rec["coll"] > 0          # sharded training must communicate

@@ -1,0 +1,122 @@
+"""Per-kernel allclose vs the pure-jnp oracles (interpret=True), with
+shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sparse import random as sprand
+from repro.core import csr, predictor
+from repro.kernels import ops, ref
+from repro.kernels.sortnet import (bitonic_sort, bitonic_sort_pairs,
+                                   segmented_run_sums, next_pow2)
+
+
+# --------------------------------------------------------------------------- #
+# sortnet
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("n", [2, 8, 64, 256])
+@pytest.mark.parametrize("rows", [1, 5])
+def test_bitonic_matches_npsort(n, rows):
+    x = jnp.asarray(np.random.default_rng(n + rows).integers(
+        0, 1000, size=(rows, n)).astype(np.int32))
+    np.testing.assert_array_equal(np.sort(np.asarray(x), -1),
+                                  np.asarray(bitonic_sort(x)))
+
+
+def test_bitonic_pairs_preserve_value_multiset():
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.integers(0, 9, size=(3, 32)).astype(np.int32))
+    v = jnp.asarray(rng.random((3, 32)).astype(np.float32))
+    ks, vs = bitonic_sort_pairs(k, v)
+    for r in range(3):
+        for key in np.unique(np.asarray(k[r])):
+            got = np.asarray(vs[r])[np.asarray(ks[r]) == key].sum()
+            want = np.asarray(v[r])[np.asarray(k[r]) == key].sum()
+            assert abs(got - want) < 1e-5
+
+
+def test_segmented_run_sums():
+    k = jnp.asarray([[1, 1, 2, 2, 2, 7, 9, 9]], dtype=jnp.int32)
+    v = jnp.asarray([[1., 2., 3., 4., 5., 6., 7., 8.]], dtype=jnp.float32)
+    first, sums = segmented_run_sums(k, v, sentinel=jnp.int32(9))  # 9=sentinel
+    f = np.asarray(first[0])
+    s = np.asarray(sums[0])
+    assert list(f) == [True, False, True, False, False, True, False, False]
+    assert s[0] == 3.0 and s[2] == 12.0 and s[5] == 6.0
+
+
+def test_next_pow2():
+    assert [next_pow2(x) for x in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+
+
+# --------------------------------------------------------------------------- #
+# kernels vs refs: shape sweeps
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("m,n,da,db,block", [
+    (100, 100, 4, 4, 32), (257, 180, 7, 3, 64), (64, 512, 12, 9, 16)])
+def test_flop_kernel_sweep(m, n, da, db, block):
+    a = sprand.erdos_renyi(m, n, da, seed=m)
+    b = sprand.erdos_renyi(n, m, db, seed=n)
+    ad, bd = csr.to_device(a), csr.to_device(b)
+    mda = int(a.row_nnz.max())
+    got = ops.flop_per_row(ad, bd, block_rows=block, max_deg_a=mda)
+    want = ref.flop_per_row_ref(ad.rpt, ad.col, jnp.diff(bd.rpt))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("samples,block", [(8, 8), (37, 8), (5, 16)])
+def test_symbolic_kernel_sweep(samples, block):
+    a = sprand.banded(200, 200, 8, 12, seed=3)
+    b = sprand.erdos_renyi(200, 160, 5, seed=4)
+    ad, bd = csr.to_device(a), csr.to_device(b)
+    mda, mdb = int(a.row_nnz.max()), int(b.row_nnz.max())
+    rows = predictor.draw_sample_rows(jax.random.PRNGKey(samples), 200, samples)
+    zk, fk = ops.sampled_symbolic(ad, bd, rows, mda, mdb, block_samples=block)
+    zr, fr = ref.sampled_symbolic_ref(ad, bd, rows, mda, mdb)
+    assert int(zk) == int(zr)
+    assert int(fk) == int(fr)
+
+
+def test_symbolic_kernel_feeds_predictor():
+    """predictor(use_kernel=True) == predictor(use_kernel=False)."""
+    a = sprand.banded(300, 300, 9, 11, seed=6)
+    ad = csr.to_device(a)
+    mda = int(a.row_nnz.max())
+    rows = predictor.draw_sample_rows(jax.random.PRNGKey(0), 300, 16)
+    p_ref = predictor.proposed_predict(ad, ad, rows, mda, mda, use_kernel=False)
+    p_ker = predictor.proposed_predict(ad, ad, rows, mda, mda, use_kernel=True)
+    assert float(p_ref.nnz_total) == pytest.approx(float(p_ker.nnz_total))
+
+
+@pytest.mark.parametrize("cap", [16, 64])
+def test_numeric_kernel_sweep(cap):
+    a = sprand.erdos_renyi(150, 150, 6, seed=8)
+    b = sprand.erdos_renyi(150, 120, 4, seed=9)
+    ad, bd = csr.to_device(a), csr.to_device(b)
+    mda, mdb = int(a.row_nnz.max()), int(b.row_nnz.max())
+    rows = jnp.arange(150, dtype=jnp.int32)
+    ck, vk, nk, ofk = ops.spgemm_numeric(ad, bd, rows, max_deg_a=mda,
+                                         max_deg_b=mdb, row_capacity=cap,
+                                         block_rows=8)
+    cr_, vr_, nr_, ofr = ref.spgemm_numeric_ref(ad, bd, rows, mda, mdb, cap)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr_))
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr_), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(nr_))
+    assert int(ofk) == int(ofr)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sq,sk,d,causal", [
+    (128, 128, 64, True), (128, 256, 64, False), (256, 256, 32, True)])
+def test_flash_attention_sweep(sq, sk, d, causal, dtype):
+    rng = np.random.default_rng(sq + sk + d)
+    q = jnp.asarray(rng.standard_normal((1, 4, sq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((1, 2, sk, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((1, 2, sk, d)), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)

@@ -1,0 +1,94 @@
+"""Launch-layer specs: shape-cell table, skip rules, batch-axis divisibility,
+decode structs, and the sharding rules."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import registry, get_config
+from repro.launch import specs
+from repro.models.sharding import make_rules, specs_from_schema, cache_spec_tree
+from repro.models.transformer import build_schema
+from repro.models.schema import abstract_params
+
+
+def test_shapes_table():
+    assert specs.SHAPES["train_4k"] == dict(kind="train", seq=4096, batch=256)
+    assert specs.SHAPES["long_500k"]["seq"] == 524_288
+
+
+def test_live_cells_count():
+    archs = list(registry().keys())
+    cells = specs.live_cells(archs)
+    # 10 × (train, prefill, decode) + 2 × long_500k
+    assert len(cells) == 32
+    assert ("xlstm-125m", "long_500k") in cells
+    assert ("qwen2.5-32b", "long_500k") not in cells
+
+
+@pytest.mark.parametrize("arch", list(registry().keys()))
+def test_batch_axes_divisible(arch):
+    cfg = get_config(arch)
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    for shape, sh in specs.SHAPES.items():
+        if not specs.cell_is_live(arch, shape):
+            continue
+        for mp in (False, True):
+            ax = specs._batch_axes(cfg, sh["batch"], mp)
+            if ax is None:
+                assert sh["batch"] < 16  # only the tiny batches
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            prod = 1
+            for a in axes:
+                prod *= sizes[a]
+            assert sh["batch"] % prod == 0, (arch, shape, axes)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "deepseek-v3-671b",
+                                  "zamba2-7b", "whisper-small"])
+def test_decode_structs_and_specs_align(arch):
+    cfg = get_config(arch)
+    tokens, cur_len, cache, enc = specs.decode_structs(cfg, "decode_32k")
+    t_spec, l_spec, cache_specs, enc_spec = specs.decode_pspecs(
+        cfg, "decode_32k", multi_pod=False)
+    assert tokens.shape == (128, 1)
+    # cache spec tree matches the cache structure
+    assert (jax.tree_util.tree_structure(cache) ==
+            jax.tree_util.tree_structure(
+                cache_specs, is_leaf=lambda x: isinstance(x, P)))
+    if cfg.is_encoder_decoder:
+        assert enc is not None and enc_spec is not None
+
+
+@pytest.mark.parametrize("arch", list(registry().keys()))
+def test_param_specs_divide_shapes(arch):
+    """Every sharded param dim must divide by its mesh axis size."""
+    cfg = get_config(arch)
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    schema = build_schema(cfg, mesh_model=16)
+    rules = make_rules(cfg, mesh_model=16, multi_pod=True)
+    pspecs = specs_from_schema(schema, rules)
+    params = abstract_params(schema)
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_s = jax.tree_util.tree_leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for leaf, spec in zip(flat_p, flat_s):
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            n = 1
+            for a in axes:
+                n *= sizes[a]
+            assert dim % n == 0, (arch, leaf.shape, spec)
+
+
+def test_non_tp_rules_replicate_weights():
+    cfg = get_config("xlstm-125m")
+    rules = make_rules(cfg, mesh_model=16, multi_pod=False)
+    assert rules["ff"] is None and rules["ssm_inner"] is None
+    cfg2 = get_config("qwen2.5-32b")
+    rules2 = make_rules(cfg2, mesh_model=16, multi_pod=False)
+    assert rules2["ff"] == "model"

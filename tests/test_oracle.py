@@ -1,0 +1,128 @@
+"""Numpy oracles vs brute-force dense math + the paper's error identities."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse.formats import CSR
+from repro.sparse import random as sprand
+from repro.core import oracle
+
+
+def _rand_pair(seed, m=60, k=50, n=40, da=4, db=5):
+    a = sprand.erdos_renyi(m, k, da, seed)
+    b = sprand.erdos_renyi(k, n, db, seed + 1)
+    return a, b
+
+
+def test_flop_per_row_bruteforce():
+    a, b = _rand_pair(0)
+    flopr, total = oracle.flop_per_row(a, b)
+    ad, bd = a.to_dense() != 0, b.to_dense() != 0
+    expect = (ad.astype(np.int64) @ bd.sum(1).astype(np.int64))
+    np.testing.assert_array_equal(flopr, expect)
+    assert total == expect.sum()
+
+
+def test_exact_structure_bruteforce():
+    a, b = _rand_pair(7)
+    nnzr, z = oracle.exact_structure(a, b)
+    cd = (a.to_dense() != 0).astype(np.int32) @ (b.to_dense() != 0).astype(np.int32)
+    np.testing.assert_array_equal(nnzr, (cd > 0).sum(1))
+    assert z == int((cd > 0).sum())
+
+
+def test_exact_structure_chunking_invariant():
+    a, b = _rand_pair(3, m=200)
+    n1, z1 = oracle.exact_structure(a, b, chunk_flop=1 << 30)
+    n2, z2 = oracle.exact_structure(a, b, chunk_flop=64)
+    np.testing.assert_array_equal(n1, n2)
+    assert z1 == z2
+
+
+def test_spgemm_numeric_oracle():
+    a, b = _rand_pair(11)
+    c = oracle.spgemm(a, b)
+    np.testing.assert_allclose(c.to_dense(), a.to_dense() @ b.to_dense(),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_full_sample_is_exact():
+    """Sampling ALL rows makes both predictors exact (error → 0)."""
+    a, b = _rand_pair(23)
+    rows = np.arange(a.nrows)
+    _, z = oracle.exact_structure(a, b)
+    pp = oracle.proposed_predict(a, b, rows=rows)
+    rp = oracle.reference_predict(a, b, rows=rows)
+    assert abs(pp.nnz_total - z) / z < 1e-9
+    assert abs(rp.nnz_total - z) / z < 1e-9
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_eq5_identity(seed):
+    """Paper eq. 5: e2 == (e1 - ef) / (1 + ef), exactly, per construction."""
+    a, b = _rand_pair(seed % 97, m=120)
+    _, z = oracle.exact_structure(a, b)
+    floprc, f_total = oracle.flop_per_row(a, b)
+    rows = oracle.sample_rows(a.nrows, seed)
+    pp = oracle.proposed_predict(a, b, rows=rows)
+    rp = oracle.reference_predict(a, b, rows=rows)
+    e1 = (rp.nnz_total - z) / z
+    ef = (rp.sampled_flop / (rows.size / a.nrows) - f_total) / f_total
+    e2 = (pp.nnz_total - z) / z
+    assert abs(e2 - (e1 - ef) / (1 + ef)) < 1e-9
+
+
+def test_structure_prediction_scales_with_flopr():
+    """Predicted structure = floprC / CR* (the paper's final step)."""
+    a, b = _rand_pair(5)
+    floprc, _ = oracle.flop_per_row(a, b)
+    pp = oracle.proposed_predict(a, b, seed=1)
+    np.testing.assert_allclose(pp.structure, floprc / pp.compression_ratio)
+
+
+def test_upper_bound_dominates_exact():
+    a, b = _rand_pair(9)
+    nnzr, _ = oracle.exact_structure(a, b)
+    ub = oracle.upper_bound_predict(a, b)
+    assert np.all(ub.structure >= nnzr)
+
+
+def test_minhash_reasonable():
+    """k-min-hash is a real estimator: within 50% on an easy case."""
+    a = sprand.erdos_renyi(5000, 5000, 6, seed=42)
+    _, z = oracle.exact_structure(a, a)
+    mh = oracle.minhash_predict(a, a, seed=0, k=64)
+    assert 0.5 * z < mh.nnz_total < 1.5 * z
+
+
+def test_sample_rows_paper_rule():
+    assert oracle.sample_rows(200_000, 0).size == 300      # cap
+    assert oracle.sample_rows(50_000, 0).size == 150        # 0.003·M
+    assert oracle.sample_rows(100, 0).size == 1             # floor → min 1
+
+
+def test_stratified_predict_differentiates_mixed_cr():
+    """Beyond-paper: per-segment CR captures heterogeneous compression that
+    the global-CR prediction (∝ flopr) cannot."""
+    from repro.sparse.formats import CSR
+    m = 2000
+    top = sprand.banded(m // 2, m, 40, 24, seed=1)      # high-CR rows
+    bot = sprand.erdos_renyi(m // 2, m, 5, seed=2)      # CR≈1 rows
+    rows = np.concatenate([np.repeat(np.arange(m // 2), top.row_nnz),
+                           np.repeat(np.arange(m // 2, m), bot.row_nnz)])
+    a = CSR.from_coo(rows, np.concatenate([top.col, bot.col]),
+                     np.concatenate([top.val, bot.val]), (m, m), dedup=False)
+    nnzr, z = oracle.exact_structure(a, a)
+    sp = oracle.stratified_predict(a, a, seed=0, num_segments=16,
+                                   per_segment=8)
+    gp = oracle.proposed_predict(a, a, seed=0)
+    # both totals accurate...
+    assert abs(sp.nnz_total - z) / z < 0.15
+    # ...but only the stratified structure tracks the per-half profile
+    top_true = nnzr[: m // 2].mean() / max(nnzr[m // 2:].mean(), 1)
+    top_strat = sp.structure[: m // 2].mean() / max(
+        sp.structure[m // 2:].mean(), 1e-9)
+    top_glob = gp.structure[: m // 2].mean() / max(
+        gp.structure[m // 2:].mean(), 1e-9)
+    assert abs(np.log(top_strat / top_true)) < abs(np.log(top_glob / top_true))

@@ -1,0 +1,64 @@
+"""Hypothesis property tests on the predictor's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import random as sprand
+from repro.core import oracle
+from repro.kernels.sortnet import next_pow2
+import jax.numpy as jnp
+
+
+@given(st.integers(0, 1000), st.integers(2, 10), st.integers(60, 400))
+@settings(max_examples=20, deadline=None)
+def test_prediction_positive_and_bounded(seed, d, m):
+    """Z2* ∈ (0, FLOP]: CR* ≥ 1 always (distinct ≤ products)."""
+    a = sprand.erdos_renyi(m, m, d, seed)
+    rows = oracle.sample_rows(m, seed)
+    p = oracle.proposed_predict(a, a, rows=rows)
+    assert p.compression_ratio >= 1.0 - 1e-9
+    assert 0 < p.nnz_total <= p.total_flop + 1e-9
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_value_scaling_invariance(seed):
+    """The structure prediction depends only on sparsity, not values."""
+    a = sprand.erdos_renyi(200, 200, 5, seed)
+    b = sprand.erdos_renyi(200, 200, 5, seed + 1)
+    a2 = type(a)(rpt=a.rpt, col=a.col, val=a.val * 7.5, shape=a.shape)
+    rows = oracle.sample_rows(200, seed)
+    p1 = oracle.proposed_predict(a, b, rows=rows)
+    p2 = oracle.proposed_predict(a2, b, rows=rows)
+    assert p1.nnz_total == p2.nnz_total
+
+
+@given(st.integers(0, 500), st.integers(1, 50))
+@settings(max_examples=15, deadline=None)
+def test_sampled_counts_monotone_in_rows(seed, extra):
+    """Adding sampled rows can only grow z* and f*."""
+    a = sprand.power_law(300, 300, 6, 1.5, seed)
+    rows1 = oracle.sample_rows(300, seed)[:5]
+    rng = np.random.default_rng(seed + 1)
+    rows2 = np.concatenate([rows1, rng.integers(0, 300, extra)])
+    z1 = oracle.exact_sampled_nnz(a, a, rows1)
+    z2 = oracle.exact_sampled_nnz(a, a, rows2)
+    assert z2 >= z1
+
+
+@given(st.integers(1, 5000))
+@settings(max_examples=30, deadline=None)
+def test_next_pow2_property(n):
+    p = next_pow2(n)
+    assert p >= n and p & (p - 1) == 0 and p < 2 * n + 2
+
+
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=64))
+@settings(max_examples=25, deadline=None)
+def test_bitonic_arbitrary_content(xs):
+    from repro.kernels.sortnet import bitonic_sort
+    import numpy as np
+    n = next_pow2(len(xs))
+    arr = np.full((1, n), np.iinfo(np.int32).max, np.int32)
+    arr[0, :len(xs)] = xs
+    out = np.asarray(bitonic_sort(jnp.asarray(arr)))[0]
+    assert list(out[:len(xs)]) == sorted(xs)

@@ -1,0 +1,73 @@
+"""CSR substrate: roundtrips, the paper's reshape rule, generators."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse.formats import CSR, match_dims
+from repro.sparse import random as sprand
+
+
+def test_dense_roundtrip():
+    rng = np.random.default_rng(0)
+    a = (rng.random((13, 17)) < 0.3) * rng.standard_normal((13, 17))
+    c = CSR.from_dense(a.astype(np.float32))
+    np.testing.assert_allclose(c.to_dense(), a.astype(np.float32))
+
+
+def test_coo_dedup_sums():
+    c = CSR.from_coo(np.array([0, 0, 1]), np.array([2, 2, 0]),
+                     np.array([1.0, 2.0, 5.0], np.float32), (2, 3))
+    assert c.nnz == 2
+    d = c.to_dense()
+    assert d[0, 2] == 3.0 and d[1, 0] == 5.0
+
+
+def test_reshape_rule_left_cols():
+    """Paper VI-A: 10x10 × 5x5 → keep left 5 columns of A."""
+    rng = np.random.default_rng(1)
+    a = CSR.from_dense((rng.random((10, 10)) < 0.5).astype(np.float32))
+    b = CSR.from_dense((rng.random((5, 5)) < 0.5).astype(np.float32))
+    am, bm = match_dims(a, b)
+    assert am.shape == (10, 5) and bm.shape == (5, 5)
+    np.testing.assert_allclose(am.to_dense(), a.to_dense()[:, :5])
+
+
+def test_reshape_rule_top_rows():
+    rng = np.random.default_rng(2)
+    a = CSR.from_dense((rng.random((5, 5)) < 0.5).astype(np.float32))
+    b = CSR.from_dense((rng.random((10, 10)) < 0.5).astype(np.float32))
+    am, bm = match_dims(a, b)
+    assert am.shape == (5, 5) and bm.shape == (5, 10)
+    np.testing.assert_allclose(bm.to_dense(), b.to_dense()[:5])
+
+
+@given(st.integers(10, 200), st.integers(1, 8), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_generator_invariants(m, d, seed):
+    a = sprand.erdos_renyi(m, m, d, seed)
+    assert a.shape == (m, m)
+    assert a.nnz == a.rpt[-1] == len(a.col)
+    # sorted, in-range columns per row
+    for i in range(0, m, max(1, m // 7)):
+        cols = a.col[a.rpt[i]:a.rpt[i + 1]]
+        assert np.all(np.diff(cols) > 0)
+        assert cols.size == 0 or (cols.min() >= 0 and cols.max() < m)
+
+
+def test_banded_band_respected():
+    a = sprand.banded(100, 100, 8, 5, seed=3)
+    rows = np.repeat(np.arange(100), a.row_nnz)
+    assert np.all(np.abs(a.col - rows) <= 5)
+
+
+def test_suite_mini_cr_spread():
+    """The synthetic families must span low→high CR like Table II."""
+    from repro.sparse.suite import mini_suite
+    from repro.core import oracle
+    crs = {}
+    for name, m in mini_suite():
+        _, f = oracle.flop_per_row(m, m)
+        _, z = oracle.exact_structure(m, m)
+        crs[name] = f / z
+    assert crs["mini_er"] < 1.5
+    assert crs["mini_fem"] > 5.0
