@@ -1,0 +1,93 @@
+"""Degree-binned vs global-pad pipeline on skewed and uniform families.
+
+The acceptance metric for the binning engine (core/binning.py): on the
+power-law family the binned pipeline must process ≥2x fewer expanded-buffer
+lanes AND run faster in interpret mode than padding every row to the global
+``(DA, DB)``.  Banded/FEM families are the control — near-uniform degrees,
+so binning should neither help nor hurt there.
+
+Emits ``binning.*`` CSV rows (captured into BENCH_kernels.json by run.py)
+plus a machine-readable summary via ``summary()``.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.sparse import random as sprand
+from repro.sparse.suite import degree_skew
+from repro.core import binning, csr, predictor, spgemm
+from repro.core.flop import flop_per_row
+from .common import timeit, emit
+
+_LAST: dict = {}
+
+
+def _cases():
+    return [
+        ("pl", sprand.power_law(3000, 3000, 5, 1.5, seed=11),
+         sprand.power_law(3000, 3000, 4, 1.6, seed=12)),
+        ("band", sprand.banded(2000, 2000, 12, 16, seed=13),
+         sprand.banded(2000, 2000, 10, 14, seed=14)),
+    ]
+
+
+def run():
+    _LAST.clear()
+    for fam, a, b in _cases():
+        ad, bd = csr.to_device(a), csr.to_device(b)
+        mda, mdb = int(a.row_nnz.max()), int(b.row_nnz.max())
+        plan = binning.build_plan(a, b)
+        skew = degree_skew(a)
+
+        rows = predictor.draw_sample_rows(
+            jax.random.PRNGKey(0), a.nrows, predictor.static_sample_num(a.nrows))
+
+        t_pred_g = timeit(lambda: jax.block_until_ready(
+            predictor.proposed_predict(ad, bd, rows, mda, mdb).nnz_total))
+        t_pred_b = timeit(lambda: jax.block_until_ready(
+            predictor.proposed_predict_binned(ad, bd, rows, plan).nnz_total))
+
+        floprc, _ = flop_per_row(ad, bd)
+        pred = predictor.proposed_predict(ad, bd, rows, mda, mdb)
+        alloc = predictor.AllocationPlan.from_prediction(
+            np.asarray(pred.structure), np.asarray(floprc), safety=1.5)
+        balloc = predictor.BinnedAllocationPlan.from_prediction(
+            plan, np.asarray(pred.structure), np.asarray(floprc), safety=1.5)
+
+        t_num_g = timeit(lambda: jax.block_until_ready(
+            spgemm.spgemm(ad, bd, row_capacity=alloc.row_capacity,
+                          max_deg_a=mda, max_deg_b=mdb,
+                          block_rows=256).overflow))
+        t_num_b = timeit(lambda: jax.block_until_ready(
+            spgemm.spgemm_binned(ad, bd, plan, alloc=balloc).overflow))
+
+        emit(f"binning.{fam}.predict_global.us", t_pred_g * 1e6, "jnp")
+        emit(f"binning.{fam}.predict_binned.us", t_pred_b * 1e6, "binned")
+        emit(f"binning.{fam}.numeric_global.us", t_num_g * 1e6, "jnp")
+        emit(f"binning.{fam}.numeric_binned.us", t_num_b * 1e6, "binned")
+        emit(f"binning.{fam}.lane_reduction.x", plan.lane_reduction, "plan")
+        emit(f"binning.{fam}.numeric_speedup.x", t_num_g / max(t_num_b, 1e-12),
+             "wallclock")
+        _LAST[fam] = dict(
+            skew=skew, plan=plan.stats(),
+            lane_reduction=round(plan.lane_reduction, 3),
+            predict_global_us=round(t_pred_g * 1e6, 1),
+            predict_binned_us=round(t_pred_b * 1e6, 1),
+            numeric_global_us=round(t_num_g * 1e6, 1),
+            numeric_binned_us=round(t_num_b * 1e6, 1),
+            numeric_speedup=round(t_num_g / max(t_num_b, 1e-12), 3),
+            row_capacity_global=alloc.row_capacity,
+            bucket_capacities=list(balloc.bucket_capacities),
+        )
+
+
+def summary() -> dict:
+    """Machine-readable results of the last run() (for BENCH_kernels.json)."""
+    return dict(_LAST)
+
+
+if __name__ == "__main__":
+    run()
+    import json
+    print(json.dumps(summary(), indent=1))

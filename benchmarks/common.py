@@ -33,5 +33,25 @@ def timeit(fn, *, warmup: int = 1, iters: int = 3) -> float:
     return ts[len(ts) // 2]
 
 
+RECORDS: list[dict] = []
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.3f},{derived}")
+    RECORDS.append(dict(name=name, us_per_call=round(float(us_per_call), 3),
+                        variant=derived))
+
+
+def reset_records() -> None:
+    RECORDS.clear()
+
+
+def write_bench_json(path: str, extra: dict | None = None) -> None:
+    """Persist every emitted record (+ optional extra sections) as JSON —
+    the cross-PR perf trajectory artifact (BENCH_kernels.json)."""
+    payload = dict(records=list(RECORDS))
+    if extra:
+        payload.update(extra)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.sparse import random as sprand
-from repro.core import csr, predictor
+from repro.core import binning, csr, predictor
 from repro.kernels import ops, ref
 from .common import timeit, emit
 
@@ -33,6 +33,34 @@ def run():
     t = timeit(lambda: jax.block_until_ready(
         ref.sampled_symbolic_ref(ad, bd, rows, mda, mdb)[0]))
     emit("kernel.sampled_symbolic_ref.us", t * 1e6, "jnp")
+
+    t = timeit(lambda: jax.block_until_ready(
+        ops.fused_flop_symbolic(ad, bd, rows, mda, mdb)[0]))
+    emit("kernel.fused_flop_symbolic.us", t * 1e6, "interpret")
+    t = timeit(lambda: jax.block_until_ready(
+        ops.flop_rows(ad, bd, rows, max_deg_a=mda, block_rows=8)))
+    emit("kernel.flop_rows.us", t * 1e6, "interpret")
+
+    # binned vs global-pad numeric kernel on a skewed (power-law) operand:
+    # the hub row forces the global path to a hub-sized F2 for every row.
+    pa = sprand.power_law(600, 600, 4, 1.5, seed=3)
+    pad = csr.to_device(pa)
+    pmda = int(pa.row_nnz.max())
+    plan = binning.build_plan(pa, pa)
+    prows = jnp.arange(pa.nrows, dtype=jnp.int32)
+    t = timeit(lambda: jax.block_until_ready(
+        ops.spgemm_numeric(pad, pad, prows, max_deg_a=pmda, max_deg_b=pmda,
+                           row_capacity=64, block_rows=8)[3]), iters=1)
+    emit("kernel.spgemm_numeric_globalpad.us", t * 1e6, "interpret")
+
+    def binned_numeric():
+        for bucket in plan.buckets:
+            jax.block_until_ready(ops.spgemm_numeric(
+                pad, pad, jnp.asarray(bucket.rows),
+                max_deg_a=bucket.deg_a, max_deg_b=bucket.deg_b,
+                row_capacity=64, block_rows=min(bucket.block_rows, 8))[3])
+    t = timeit(lambda: binned_numeric(), iters=1)
+    emit("kernel.spgemm_numeric_binned.us", t * 1e6, "interpret")
 
     rng = np.random.default_rng(0)
     q = jnp.asarray(rng.standard_normal((1, 4, 256, 64)), jnp.float32)

@@ -1,27 +1,34 @@
 """Benchmark harness: one module per paper table/figure + framework benches.
 
 Prints ``name,us_per_call,derived`` CSV rows (plus table sections as
-comment/CSV blocks).  Usage: PYTHONPATH=src python -m benchmarks.run
+comment/CSV blocks) and writes ``BENCH_kernels.json`` at the repo root —
+the machine-readable perf trajectory tracked across PRs.
+Usage: PYTHONPATH=src python -m benchmarks.run
 """
 from __future__ import annotations
 
+import os
 import sys
 import traceback
+
+from . import common
 
 
 def main() -> None:
     from . import (table2_suite, table3_accuracy, fig2_overhead,
-                   kernels_bench, roofline_bench, moe_capacity_bench,
-                   partition_bench)
+                   kernels_bench, binning_bench, roofline_bench,
+                   moe_capacity_bench, partition_bench)
     sections = [
         ("table2 (suite stats)", table2_suite.run),
         ("table3 (625-case accuracy)", table3_accuracy.run),
         ("fig2 (prediction overhead)", fig2_overhead.run),
         ("kernels (pallas microbench)", kernels_bench.run),
+        ("binning (binned vs global-pad)", binning_bench.run),
         ("roofline (dry-run cells)", roofline_bench.run),
         ("moe capacity (beyond-paper)", moe_capacity_bench.run),
         ("partition (load balance)", partition_bench.run),
     ]
+    common.reset_records()
     failed = 0
     for name, fn in sections:
         print(f"\n## {name}")
@@ -30,6 +37,10 @@ def main() -> None:
         except Exception:
             failed += 1
             traceback.print_exc()
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
+    common.write_bench_json(os.path.abspath(out),
+                            extra=dict(binning=binning_bench.summary()))
+    print(f"\nwrote {os.path.abspath(out)}")
     if failed:
         sys.exit(1)
 

@@ -1,0 +1,247 @@
+"""Degree-aware row binning — the execution planner for both phases.
+
+Motivation (DESIGN.md §4): the TPU adaptation expands each processed row into
+a static ``(rows, DA·DB)`` gather/sort buffer where ``DA``/``DB`` are the
+*global* max row degrees.  One hub row in a power-law matrix therefore
+inflates the buffer quadratically for **every** row.  The standard SpGEMM fix
+(Liu & Vinter, arXiv:1504.05022) is to bucket rows by the size of their
+intermediate product set and run each bucket with buffers sized for *that*
+bucket.
+
+This module is the host-side planner (launch-time numpy, like
+``core.partition``):
+
+  * every output row ``i`` gets a width ``w_i = max(1, deg_a_i · dbmax_i)``
+    where ``dbmax_i`` is the largest B-row degree among the B rows the row
+    references — the exact lane count its gather/sort buffer needs;
+  * rows are partitioned into pow2 buckets by ``ceil_pow2(w_i)``; buckets
+    with fewer than ``min_rows`` rows are coalesced upward so tiny buckets
+    don't fragment the grid into many kernel launches;
+  * each bucket carries a static plan ``(rows, deg_a, deg_b, block_rows)``:
+    ``deg_a``/``deg_b`` are the bucket's exact max degrees by default
+    (``deg_align > 1`` opts into quantized bounds, see :func:`round_deg`) and
+    ``block_rows`` is chosen so ``block_rows · next_pow2(deg_a·deg_b)`` stays
+    under ``lane_budget`` (the VMEM envelope of the Pallas kernels).
+
+Compile-cache contract: the device executors are ``jax.jit``-cached on the
+bucket's static shapes — ``RowBucket.signature`` (= the static argnames)
+*plus* the traced shapes, of which the bucket's row count is the one that
+varies.  Two plans share a bucket's compiled program iff the signature AND
+the bucket population match (padding populations to coarser sizes to raise
+hit rates is a possible future knob); ``BinningPlan.signatures()`` exposes
+the static part so callers (and tests) can check signature-level overlap.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+DEFAULT_LANE_BUDGET = 1 << 17   # lanes per kernel block: BS·F2 ≤ budget
+DEFAULT_MAX_BLOCK_ROWS = 256
+DEFAULT_MIN_ROWS = 32           # coalesce buckets smaller than this
+
+
+def ceil_pow2(n: int) -> int:
+    """Smallest power of two ≥ max(1, n)."""
+    return 1 << max(0, (int(n) - 1).bit_length())
+
+
+def round_deg(d: int, align: int = 1) -> int:
+    """Degree bound rounding.  ``align=1`` keeps the exact bucket maximum —
+    binned lanes are then ≤ global lanes for every row, by construction.
+    Larger ``align`` quantizes (pow2 below ``align``, then multiples of it),
+    trading ≤ ~1/align buffer inflation for a smaller signature set that
+    jit-cache-shares across differently-shaped matrices."""
+    d = max(1, int(d))
+    if align <= 1:
+        return d
+    if d <= align:
+        return ceil_pow2(d)
+    return ((d + align - 1) // align) * align
+
+
+@dataclasses.dataclass(frozen=True)
+class RowBucket:
+    """One degree bucket: static shapes + the row ids that run under them."""
+
+    rows: np.ndarray      # int32 (n,) output-row ids, ascending
+    deg_a: int            # bound on A-row degree within the bucket
+    deg_b: int            # bound on referenced-B-row degree
+    block_rows: int       # grid block height for this bucket's kernels
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.rows.size)
+
+    @property
+    def width(self) -> int:
+        """Gather-buffer lanes per row (before kernel pow2 rounding)."""
+        return self.deg_a * self.deg_b
+
+    @property
+    def lanes(self) -> int:
+        """Total expanded-buffer lanes this bucket processes."""
+        return self.n_rows * self.width
+
+    @property
+    def signature(self) -> tuple[int, int, int]:
+        """The static shape tuple device executors specialize on."""
+        return (self.deg_a, self.deg_b, self.block_rows)
+
+
+@dataclasses.dataclass(frozen=True)
+class BinningPlan:
+    """Partition of all output rows into degree buckets."""
+
+    buckets: tuple[RowBucket, ...]
+    nrows: int
+    global_deg_a: int         # the global-pad bounds the plan replaces
+    global_deg_b: int
+    row_bucket: np.ndarray    # int32 (nrows,) row → bucket index
+
+    @property
+    def lanes(self) -> int:
+        """Expanded-buffer lanes processed by the binned pipeline."""
+        return sum(b.lanes for b in self.buckets)
+
+    @property
+    def global_lanes(self) -> int:
+        """Lanes the global-pad pipeline processes for the same rows."""
+        return self.nrows * max(1, self.global_deg_a * self.global_deg_b)
+
+    @property
+    def lane_reduction(self) -> float:
+        """How many× fewer lanes the binned pipeline touches (≥ 1 good)."""
+        return self.global_lanes / max(1, self.lanes)
+
+    def signatures(self) -> tuple[tuple[int, int, int], ...]:
+        """Sorted unique bucket signatures — the compile-cache key set."""
+        return tuple(sorted({b.signature for b in self.buckets}))
+
+    def inverse_perm(self) -> np.ndarray:
+        """Permutation restoring row-id order from bucket-concatenation order.
+
+        Buckets partition the rows, so ``concat(per-bucket results)[perm]``
+        assembles a full per-row array without per-bucket scatter copies —
+        the shared assembly idiom of the binned executors."""
+        return np.argsort(
+            np.concatenate([b.rows for b in self.buckets])
+            if self.buckets else np.zeros(0, np.int32), kind="stable")
+
+    def subset(self, rows: np.ndarray) -> list[np.ndarray]:
+        """Bucket an arbitrary row list (e.g. the sampled rows) under this
+        plan — entry ``i`` holds the rows of ``rows`` that live in bucket
+        ``i`` (duplicates preserved: sampling is with replacement)."""
+        rows = np.asarray(rows, dtype=np.int64)
+        which = self.row_bucket[rows]
+        return [np.ascontiguousarray(rows[which == i].astype(np.int32))
+                for i in range(len(self.buckets))]
+
+    def stats(self) -> dict:
+        return dict(
+            num_buckets=len(self.buckets),
+            lanes_binned=self.lanes,
+            lanes_global=self.global_lanes,
+            lane_reduction=round(self.lane_reduction, 3),
+            signatures=[list(s) for s in self.signatures()],
+            bucket_rows=[b.n_rows for b in self.buckets],
+            bucket_widths=[b.width for b in self.buckets],
+        )
+
+
+def _pick_block_rows(width: int, lane_budget: int, max_block_rows: int) -> int:
+    """Largest pow2 block height with block·F2 lanes under the VMEM budget."""
+    f2 = ceil_pow2(width)
+    fit = max(1, lane_budget // f2)
+    blk = 1 << (fit.bit_length() - 1)          # floor to pow2
+    return int(max(1, min(max_block_rows, blk)))
+
+
+def row_widths(a_rpt: np.ndarray, a_col: np.ndarray,
+               rownnz_b: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-output-row (deg_a, dbmax, width) from host CSR index arrays."""
+    a_rpt = np.asarray(a_rpt, dtype=np.int64)
+    a_col = np.asarray(a_col, dtype=np.int64)
+    rownnz_b = np.asarray(rownnz_b, dtype=np.int64)
+    m = a_rpt.size - 1
+    nnz = int(a_rpt[-1])
+    deg_a = np.diff(a_rpt)
+    # max referenced-B degree per row: maximum.reduceat over the CSR slices
+    per_nnz = rownnz_b[np.clip(a_col[:nnz], 0, rownnz_b.size - 1)]
+    dbmax = np.zeros(m, dtype=np.int64)
+    nonempty = deg_a > 0
+    if nnz:
+        starts = a_rpt[:-1][nonempty]
+        dbmax[nonempty] = np.maximum.reduceat(per_nnz, starts)
+    width = np.maximum(1, deg_a * dbmax)
+    return deg_a, dbmax, width
+
+
+def build_plan(a, b, *, lane_budget: int = DEFAULT_LANE_BUDGET,
+               max_block_rows: int = DEFAULT_MAX_BLOCK_ROWS,
+               min_rows: int = DEFAULT_MIN_ROWS,
+               deg_align: int = 1) -> BinningPlan:
+    """Plan the binned execution of ``C = A·B``.
+
+    ``a``/``b`` may be host ``CSR`` or device ``CSRDevice`` — only the int
+    index arrays are read (pulled to host; planning is a launch-time step).
+    """
+    a_rpt = np.asarray(a.rpt)
+    a_col = np.asarray(a.col)
+    b_rpt = np.asarray(b.rpt)
+    rownnz_b = np.diff(b_rpt.astype(np.int64))
+    deg_a, dbmax, width = row_widths(a_rpt, a_col, rownnz_b)
+    m = deg_a.size
+
+    # pow2 bucket key per row → ascending width groups (≤ ~log2(max_width))
+    key = np.ceil(np.log2(np.maximum(width, 1))).astype(np.int64)
+    order = np.argsort(key, kind="stable")
+    sorted_key = key[order]
+    _, starts_u, counts = np.unique(sorted_key, return_index=True,
+                                    return_counts=True)
+    groups = [order[s0:s0 + c] for s0, c in zip(starts_u, counts)]
+
+    def bounds(ids):
+        da = round_deg(int(deg_a[ids].max()), deg_align) if ids.size else 1
+        db = round_deg(int(dbmax[ids].max()), deg_align) if ids.size else 1
+        return da, db
+
+    # Coalesce, ascending, and ONLY ever upward: a small group rides along
+    # with the next larger-width bucket (a few rows pay a wider buffer).
+    # Never merge downward — pulling one hub bucket into a big small-width
+    # group would re-inflate every row to hub width, which is exactly the
+    # pathology binning exists to remove.  Adjacent groups whose degree
+    # bounds coincide merge for free (same compiled program either way).
+    merged: list[np.ndarray] = []
+    carry: np.ndarray | None = None
+    for ids in groups:
+        if carry is not None:
+            ids = np.concatenate([carry, ids])
+            carry = None
+        if merged and bounds(np.concatenate([merged[-1], ids])) == bounds(merged[-1]):
+            merged[-1] = np.concatenate([merged[-1], ids])
+        elif ids.size < min_rows:
+            carry = ids
+        else:
+            merged.append(ids)
+    if carry is not None:
+        if merged and bounds(np.concatenate([merged[-1], carry])) == bounds(merged[-1]):
+            merged[-1] = np.concatenate([merged[-1], carry])
+        else:
+            merged.append(carry)        # trailing hub bucket stays isolated
+
+    buckets = []
+    row_bucket = np.zeros(m, dtype=np.int32)
+    for i, ids in enumerate(merged):
+        ids = np.sort(ids).astype(np.int32)
+        da, db = bounds(ids)
+        blk = _pick_block_rows(da * db, lane_budget, max_block_rows)
+        buckets.append(RowBucket(rows=ids, deg_a=da, deg_b=db, block_rows=blk))
+        row_bucket[ids] = i
+
+    gda = int(deg_a.max()) if m else 1
+    gdb = int(rownnz_b.max()) if rownnz_b.size else 1
+    return BinningPlan(buckets=tuple(buckets), nrows=m,
+                       global_deg_a=max(1, gda), global_deg_b=max(1, gdb),
+                       row_bucket=row_bucket)

@@ -52,6 +52,23 @@ class CSRDevice:
         return jnp.diff(self.rpt)
 
 
+def pad_row_ids(rows: jax.Array, multiple: int) -> jax.Array:
+    """Pad a row-id list to a multiple of ``multiple`` by repeating the LAST
+    listed row (padded outputs are sliced off by the caller).
+
+    Shared by every blocked row-list executor.  Repeating the last row — not
+    row 0 — matters under degree binning: the list is then a bucket, and row
+    0 of the matrix may exceed the bucket's degree envelope while a repeated
+    member row cannot.
+    """
+    r = rows.shape[0]
+    pad_r = (-(-r // multiple)) * multiple
+    rows = rows.astype(jnp.int32)
+    if pad_r == r:
+        return rows
+    return jnp.concatenate([rows, jnp.broadcast_to(rows[-1:], (pad_r - r,))])
+
+
 def to_device(host: CSR, capacity: int | None = None) -> CSRDevice:
     cap = int(capacity if capacity is not None else host.nnz)
     assert cap >= host.nnz, (cap, host.nnz)

@@ -60,6 +60,17 @@ def static_row_assignment(part: Partition, rows_per_part: int) -> np.ndarray:
     return out
 
 
+def binned_cost_weights(plan) -> np.ndarray:
+    """Per-row cost model under binned execution (``core.binning``): a row
+    costs its bucket's padded buffer width, not its own degree — the buffer
+    is what the device actually streams.  Feed to ``balanced_contiguous`` to
+    balance shards for the binned pipeline."""
+    w = np.zeros(plan.nrows, dtype=np.float64)
+    for b in plan.buckets:
+        w[b.rows] = float(b.width)
+    return w
+
+
 def straggler_report(part_flop: Partition, part_pred: Partition) -> dict:
     """Compare FLOP-balanced vs predicted-NNZ-balanced imbalance (the paper's
     load-balance claim, measured as the straggler factor a pod would see)."""

@@ -24,9 +24,11 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .csr import CSRDevice, COL_SENTINEL
 from .flop import flop_per_row
+from .binning import BinningPlan
 
 SAMPLE_FRACTION = 0.003
 SAMPLE_CAP = 300
@@ -115,6 +117,90 @@ def reference_predict(a: CSRDevice, b: CSRDevice, rows: jax.Array,
 
 
 # --------------------------------------------------------------------------- #
+# Binned prediction (DESIGN.md §4): per-bucket buffers instead of global pad.
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("max_deg_a", "max_deg_b"))
+def _bucket_counts(a: CSRDevice, b: CSRDevice, rows: jax.Array,
+                   max_deg_a: int, max_deg_b: int) -> tuple[jax.Array, jax.Array]:
+    """(z, f) for one bucket's sampled rows at the bucket's degree bounds.
+    jit's static-arg cache keyed on the bucket signature IS the compile cache
+    (see core.binning docstring)."""
+    cols, valid = gather_sampled_products(a, b, rows, max_deg_a, max_deg_b)
+    return count_distinct_sorted(cols).sum(), valid.sum()
+
+
+def _binned_counts(a: CSRDevice, b: CSRDevice, rows, plan: BinningPlan,
+                   use_kernel: bool) -> tuple[jax.Array, jax.Array]:
+    """Σ over buckets of the sampled (z*, f*) — exact ints, so the binned
+    totals equal the global-pad totals bit for bit."""
+    z = jnp.int32(0)
+    f = jnp.int32(0)
+    for bucket, sub in zip(plan.buckets, plan.subset(np.asarray(rows))):
+        if sub.size == 0:
+            continue            # no sampled rows landed in this bucket
+        sub_d = jnp.asarray(sub)
+        if use_kernel:
+            from repro.kernels import ops as kops
+            zb, fb, _ = kops.fused_flop_symbolic(
+                a, b, sub_d, bucket.deg_a, bucket.deg_b,
+                block_samples=min(bucket.block_rows, 8))
+        else:
+            zb, fb = _bucket_counts(a, b, sub_d, bucket.deg_a, bucket.deg_b)
+        z = z + zb.astype(jnp.int32)
+        f = f + fb.astype(jnp.int32)
+    return z, f
+
+
+def _binned_floprc(a: CSRDevice, b: CSRDevice, plan: BinningPlan) -> jax.Array:
+    """floprC assembled bucket-by-bucket through the binned Pallas flop
+    kernel — each bucket gathers at its own deg_a bound, not the global one."""
+    from repro.kernels import ops as kops
+    if not plan.buckets:
+        return jnp.zeros(0, dtype=jnp.int32)
+    parts = [kops.flop_rows(a, b, jnp.asarray(bucket.rows),
+                            max_deg_a=bucket.deg_a,
+                            block_rows=bucket.block_rows)
+             for bucket in plan.buckets]
+    return jnp.concatenate(parts)[plan.inverse_perm()]
+
+
+def proposed_predict_binned(a: CSRDevice, b: CSRDevice, rows,
+                            plan: BinningPlan,
+                            use_kernel: bool = False) -> PredictionDev:
+    """THE PAPER'S METHOD (eq. 4), bucket-iterated.
+
+    Identical outputs to :func:`proposed_predict` — z*/f* are exact integer
+    counts whatever the padding, and the eq. 4 arithmetic is replayed on the
+    same values — but each bucket's gather/sort buffer is (S_bin, DA_bin·DB_bin)
+    instead of (S, DA·DB).  With ``use_kernel`` the per-bucket pass is the
+    fused flop+symbolic Pallas kernel and floprC runs through the binned flop
+    kernel."""
+    if use_kernel:
+        floprc = _binned_floprc(a, b, plan)
+        total_flop = jnp.sum(floprc)
+    else:
+        floprc, total_flop = flop_per_row(a, b)
+    z_star, f_star = _binned_counts(a, b, rows, plan, use_kernel)
+    r_star = f_star.astype(jnp.float32) / jnp.maximum(z_star, 1).astype(jnp.float32)
+    z2 = total_flop.astype(jnp.float32) / r_star
+    return PredictionDev(z2, floprc.astype(jnp.float32) / r_star, r_star,
+                         f_star, z_star, total_flop)
+
+
+def reference_predict_binned(a: CSRDevice, b: CSRDevice, rows,
+                             plan: BinningPlan,
+                             use_kernel: bool = False) -> PredictionDev:
+    """Reference design (eq. 2), bucket-iterated — mirrors reference_predict."""
+    floprc, total_flop = flop_per_row(a, b)
+    z_star, f_star = _binned_counts(a, b, rows, plan, use_kernel)
+    p = np.asarray(rows).shape[0] / a.nrows
+    z1 = z_star.astype(jnp.float32) / p
+    cr = total_flop.astype(jnp.float32) / jnp.maximum(z1, 1.0)
+    return PredictionDev(z1, floprc.astype(jnp.float32) / cr, cr, f_star,
+                         z_star, total_flop)
+
+
+# --------------------------------------------------------------------------- #
 # Allocation planning: prediction → static buffer capacities (DESIGN.md §3).
 # --------------------------------------------------------------------------- #
 @dataclasses.dataclass(frozen=True)
@@ -140,3 +226,34 @@ class AllocationPlan:
         total = int(per_row.sum())
         total = max(align, ((total + align - 1) // align) * align)
         return AllocationPlan(cap, total, safety)
+
+
+@dataclasses.dataclass(frozen=True)
+class BinnedAllocationPlan:
+    """Per-bucket output capacities for the binned numeric phase.
+
+    The global plan sizes every row's slots by the worst predicted row in the
+    whole matrix; the binned plan sizes each bucket by the worst predicted row
+    *in that bucket*, so low-degree buckets keep small output buffers too."""
+
+    bucket_capacities: tuple[int, ...]   # per-bucket row_capacity
+    row_capacity: int                    # max — width of the assembled output
+    total_capacity: int                  # Σ bucket rows · bucket capacity
+    safety: float
+
+    @staticmethod
+    def from_prediction(plan: BinningPlan, pred_structure, flopr,
+                        safety: float = 1.2, align: int = 8) -> "BinnedAllocationPlan":
+        ps = np.asarray(pred_structure, dtype=np.float64)
+        fl = np.asarray(flopr, dtype=np.float64)
+        caps = []
+        total = 0
+        for bucket in plan.buckets:
+            sub = AllocationPlan.from_prediction(
+                ps[bucket.rows], fl[bucket.rows], safety=safety, align=align)
+            caps.append(sub.row_capacity)
+            total += bucket.n_rows * sub.row_capacity
+        return BinnedAllocationPlan(
+            bucket_capacities=tuple(caps),
+            row_capacity=max(caps) if caps else align,
+            total_capacity=total, safety=safety)

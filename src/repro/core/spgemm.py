@@ -20,8 +20,9 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .csr import CSRDevice, COL_SENTINEL
+from .csr import CSRDevice, COL_SENTINEL, pad_row_ids
 
 
 class SpGEMMOut(NamedTuple):
@@ -78,24 +79,93 @@ def _accumulate_block(cols, vals, row_capacity: int):
 
 @functools.partial(jax.jit, static_argnames=("row_capacity", "max_deg_a",
                                              "max_deg_b", "block_rows"))
-def spgemm(a: CSRDevice, b: CSRDevice, *, row_capacity: int,
-           max_deg_a: int, max_deg_b: int, block_rows: int = 256) -> SpGEMMOut:
-    """C = A·B numeric phase with predicted-capacity output buffers."""
-    m = a.nrows
-    nblocks = -(-m // block_rows)
-    pad_m = nblocks * block_rows
-    row_ids = jnp.arange(pad_m, dtype=jnp.int32).reshape(nblocks, block_rows)
-    row_ids = jnp.minimum(row_ids, m - 1)  # tail clamp; dup rows are sliced off
+def spgemm_rows(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
+                row_capacity: int, max_deg_a: int, max_deg_b: int,
+                block_rows: int = 256) -> SpGEMMOut:
+    """Numeric phase for an explicit row-id list (one degree bucket, or all
+    rows).  Output row ``i`` corresponds to ``rows[i]``."""
+    r = rows.shape[0]
+    nblocks = -(-r // block_rows)
+    pad_r = nblocks * block_rows
+    row_ids = pad_row_ids(rows, block_rows).reshape(nblocks, block_rows)
 
-    def body(rows):
-        cols, vals, _ = gather_products(a, b, rows, max_deg_a, max_deg_b)
+    def body(block):
+        cols, vals, _ = gather_products(a, b, block, max_deg_a, max_deg_b)
         return _accumulate_block(cols, vals, row_capacity)
 
     out_col, out_val, row_nnz, overflow = jax.lax.map(body, row_ids)
-    return SpGEMMOut(out_col.reshape(pad_m, row_capacity)[:m],
-                     out_val.reshape(pad_m, row_capacity)[:m],
-                     row_nnz.reshape(pad_m)[:m],
-                     overflow.sum())
+    out_col = out_col.reshape(pad_r, row_capacity)[:r]
+    out_val = out_val.reshape(pad_r, row_capacity)[:r]
+    row_nnz = row_nnz.reshape(pad_r)[:r]
+    # padded duplicate rows were counted in the per-block overflow sums
+    pad_over = jnp.maximum(row_nnz[-1:] - row_capacity, 0) * (pad_r - r)
+    return SpGEMMOut(out_col, out_val, row_nnz,
+                     overflow.sum() - pad_over.sum())
+
+
+def spgemm(a: CSRDevice, b: CSRDevice, *, row_capacity: int,
+           max_deg_a: int, max_deg_b: int, block_rows: int = 256) -> SpGEMMOut:
+    """C = A·B numeric phase with predicted-capacity output buffers."""
+    rows = jnp.arange(a.nrows, dtype=jnp.int32)
+    return spgemm_rows(a, b, rows, row_capacity=row_capacity,
+                       max_deg_a=max_deg_a, max_deg_b=max_deg_b,
+                       block_rows=block_rows)
+
+
+def spgemm_binned(a: CSRDevice, b: CSRDevice, plan, *,
+                  alloc, use_kernel: bool = False) -> SpGEMMOut:
+    """C = A·B numeric phase, bucket-iterated (DESIGN.md §4).
+
+    ``plan`` is a ``core.binning.BinningPlan``; ``alloc`` is either an int
+    (uniform row capacity — output bitwise-equal to :func:`spgemm`) or a
+    ``predictor.BinnedAllocationPlan`` (per-bucket capacities — smaller
+    buffers, same values wherever neither path overflows).  With
+    ``use_kernel`` each bucket routes through the Pallas numeric kernel
+    (``kernels.spgemm_numeric``) at the bucket's degree bounds.
+    """
+    if isinstance(alloc, (int, np.integer)):
+        caps = [int(alloc)] * len(plan.buckets)
+        cap_out = int(alloc)        # parity with spgemm even for empty plans
+    else:
+        caps = list(alloc.bucket_capacities)
+        cap_out = max(caps) if caps else alloc.row_capacity
+    if not plan.buckets:   # empty matrix: parity with the global path
+        return SpGEMMOut(jnp.full((0, cap_out), COL_SENTINEL, jnp.int32),
+                         jnp.zeros((0, cap_out), jnp.float32),
+                         jnp.zeros((0,), jnp.int32), jnp.int32(0))
+    parts_c, parts_v, parts_n = [], [], []
+    overflow = jnp.int32(0)
+    for bucket, cap in zip(plan.buckets, caps):
+        if bucket.n_rows == 0:
+            continue
+        rows_d = jnp.asarray(bucket.rows)
+        if use_kernel:
+            from repro.kernels import ops as kops
+            c, v, n, of = kops.spgemm_numeric(
+                a, b, rows_d, max_deg_a=bucket.deg_a, max_deg_b=bucket.deg_b,
+                row_capacity=cap, block_rows=bucket.block_rows)
+        else:
+            c, v, n, of = spgemm_rows(
+                a, b, rows_d, row_capacity=cap, max_deg_a=bucket.deg_a,
+                max_deg_b=bucket.deg_b, block_rows=bucket.block_rows)
+        if cap < cap_out:
+            c = jnp.concatenate(
+                [c, jnp.full((c.shape[0], cap_out - cap), COL_SENTINEL,
+                             jnp.int32)], axis=1)
+            v = jnp.concatenate(
+                [v, jnp.zeros((v.shape[0], cap_out - cap), jnp.float32)],
+                axis=1)
+        parts_c.append(c)
+        parts_v.append(v)
+        parts_n.append(n.astype(jnp.int32))
+        overflow = overflow + of.astype(jnp.int32)
+    # buckets partition the rows: one concat + inverse permutation assembles
+    # the output (no per-bucket full-array scatter copies)
+    perm = plan.inverse_perm()
+    return SpGEMMOut(jnp.concatenate(parts_c, axis=0)[perm],
+                     jnp.concatenate(parts_v, axis=0)[perm],
+                     jnp.concatenate(parts_n, axis=0)[perm],
+                     overflow)
 
 
 def dense_of(out: SpGEMMOut, ncols: int) -> jax.Array:

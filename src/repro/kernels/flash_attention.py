@@ -22,6 +22,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _compiler_params():
+    """The TPU compiler-params class was renamed across JAX releases
+    (CompilerParams ↔ TPUCompilerParams); resolve whichever exists."""
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(dimension_semantics=("parallel", "arbitrary"))
+
+
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                   sm_scale: float, causal: bool, block_q: int, block_k: int):
     qi = pl.program_id(0)
@@ -96,8 +103,7 @@ def _flash_single(q, k, v, *, causal: bool, block_q: int, block_k: int,
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=_compiler_params(),
         interpret=interpret,
     )(q, k, v)
 

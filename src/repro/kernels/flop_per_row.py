@@ -15,9 +15,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.csr import pad_row_ids
+
 
 def _kernel(rpt_ref, col_ref, rownnz_b_ref, out_ref, *, block_rows: int,
-            max_deg_a: int, nrows: int):
+            max_deg_a: int):
     i = pl.program_id(0)
     row0 = i * block_rows
     starts = pl.load(rpt_ref, (pl.dslice(row0, block_rows),))
@@ -28,7 +30,7 @@ def _kernel(rpt_ref, col_ref, rownnz_b_ref, out_ref, *, block_rows: int,
     valid = ia < deg[:, None]
     cap = col_ref.shape[0]
     cols = col_ref[jnp.clip(idx, 0, cap - 1)]                   # VMEM gather
-    k = b_nnz = rownnz_b_ref[jnp.clip(cols, 0, rownnz_b_ref.shape[0] - 1)]
+    b_nnz = rownnz_b_ref[jnp.clip(cols, 0, rownnz_b_ref.shape[0] - 1)]
     contrib = jnp.where(valid, b_nnz, 0)
     out_ref[...] = jnp.sum(contrib, axis=1).astype(jnp.int32)
 
@@ -46,8 +48,7 @@ def flop_per_row_pallas(rpt: jax.Array, col: jax.Array, rownnz_b: jax.Array,
     rpt_p = jnp.concatenate(
         [rpt, jnp.broadcast_to(rpt[-1:], (pad_m + 1 - rpt.shape[0],))])
     out = pl.pallas_call(
-        functools.partial(_kernel, block_rows=block_rows, max_deg_a=max_deg_a,
-                          nrows=m),
+        functools.partial(_kernel, block_rows=block_rows, max_deg_a=max_deg_a),
         grid=(nblocks,),
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),   # rpt: full, VMEM
@@ -59,3 +60,44 @@ def flop_per_row_pallas(rpt: jax.Array, col: jax.Array, rownnz_b: jax.Array,
         interpret=interpret,
     )(rpt_p, col, rownnz_b)
     return out[:m]
+
+
+def _rows_kernel(rows_ref, rpt_ref, col_ref, rownnz_b_ref, out_ref, *,
+                 block_rows: int, max_deg_a: int):
+    """Same reduction, but over an explicit row-id list (a degree bucket)."""
+    rows = rows_ref[...]                                        # (BR,)
+    starts = rpt_ref[rows]
+    deg = rpt_ref[rows + 1] - starts
+    ia = jax.lax.broadcasted_iota(jnp.int32, (block_rows, max_deg_a), 1)
+    idx = jnp.clip(starts[:, None] + ia, 0, col_ref.shape[0] - 1)
+    valid = ia < deg[:, None]
+    cols = col_ref[idx]
+    b_nnz = rownnz_b_ref[jnp.clip(cols, 0, rownnz_b_ref.shape[0] - 1)]
+    out_ref[...] = jnp.sum(jnp.where(valid, b_nnz, 0), axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "max_deg_a", "interpret"))
+def flop_rows_pallas(rpt: jax.Array, col: jax.Array, rownnz_b: jax.Array,
+                     rows: jax.Array, *, block_rows: int = 256,
+                     max_deg_a: int = 128, interpret: bool = True) -> jax.Array:
+    """floprC for the listed ``rows`` only — the binned-pipeline variant,
+    sized by the bucket's degree bound instead of the global one."""
+    r = rows.shape[0]
+    nblocks = -(-r // block_rows)
+    pad_r = nblocks * block_rows
+    rows_p = pad_row_ids(rows, block_rows)
+    out = pl.pallas_call(
+        functools.partial(_rows_kernel, block_rows=block_rows,
+                          max_deg_a=max_deg_a),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),  # rows: blocked
+            pl.BlockSpec(memory_space=pl.ANY),            # rpt
+            pl.BlockSpec(memory_space=pl.ANY),            # col
+            pl.BlockSpec(memory_space=pl.ANY),            # rownnz_b
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pad_r,), jnp.int32),
+        interpret=interpret,
+    )(rows_p, rpt, col, rownnz_b)
+    return out[:r]

@@ -29,11 +29,31 @@ def flop_per_row(a: CSRDevice, b: CSRDevice, *, block_rows: int = 256,
         interpret=_interpret())
 
 
+def flop_rows(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
+              max_deg_a: int, block_rows: int = 256) -> jax.Array:
+    """floprC for the listed rows only (binned-pipeline flop phase)."""
+    rownnz_b = jnp.diff(b.rpt)
+    return _flop_k.flop_rows_pallas(
+        a.rpt, a.col, rownnz_b, rows, block_rows=block_rows,
+        max_deg_a=max_deg_a, interpret=_interpret())
+
+
 def sampled_symbolic(a: CSRDevice, b: CSRDevice, rows: jax.Array,
                      max_deg_a: int, max_deg_b: int,
                      block_samples: int = 8) -> tuple[jax.Array, jax.Array]:
     """(z*, f*) for the proposed predictor (kernel path)."""
     return _sym_k.sampled_symbolic_pallas(
+        a.rpt, a.col, b.rpt, b.col, rows, max_deg_a=max_deg_a,
+        max_deg_b=max_deg_b, block_samples=block_samples,
+        interpret=_interpret())
+
+
+def fused_flop_symbolic(a: CSRDevice, b: CSRDevice, rows: jax.Array,
+                        max_deg_a: int, max_deg_b: int,
+                        block_samples: int = 8):
+    """(z*, f*, flop-per-sampled-row) in ONE kernel — the binned predictor's
+    per-bucket invocation (flop + symbolic share the A-row gather)."""
+    return _sym_k.fused_flop_symbolic_pallas(
         a.rpt, a.col, b.rpt, b.col, rows, max_deg_a=max_deg_a,
         max_deg_b=max_deg_b, block_samples=block_samples,
         interpret=_interpret())

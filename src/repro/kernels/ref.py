@@ -33,6 +33,21 @@ def sampled_symbolic_ref(a: CSRDevice, b: CSRDevice, rows, max_deg_a, max_deg_b)
     return z, f
 
 
+def fused_flop_symbolic_ref(a: CSRDevice, b: CSRDevice, rows, max_deg_a,
+                            max_deg_b):
+    """Oracle for kernels.fused_flop_symbolic: (z*, f*, flop per sampled row)."""
+    cols, valid = pred_mod.gather_sampled_products(a, b, rows, max_deg_a, max_deg_b)
+    z = pred_mod.count_distinct_sorted(cols).sum()
+    flop = valid.sum(axis=-1).astype(jnp.int32)
+    return z, flop.sum(), flop
+
+
+def flop_rows_ref(a: CSRDevice, b: CSRDevice, rows):
+    """Oracle for kernels.flop_rows: full jnp flop, gathered at ``rows``."""
+    floprc, _ = flop_mod.flop_per_row(a, b)
+    return floprc[rows]
+
+
 def spgemm_numeric_ref(a: CSRDevice, b: CSRDevice, rows, max_deg_a, max_deg_b,
                        row_capacity):
     """Oracle for kernels.spgemm_numeric (+compact): per-row CSR-ish output."""

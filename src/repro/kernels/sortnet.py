@@ -24,6 +24,28 @@ def next_pow2(n: int) -> int:
     return 1 << max(0, (n - 1).bit_length())
 
 
+def pad_to_pow2(keys: jnp.ndarray, vals: jnp.ndarray | None, fill_key):
+    """Pad the last axis to the next power of two with ``fill_key`` (vals
+    padded with 0), ready for :func:`bitonic_sort_pairs`.
+
+    When the length is already a power of two the inputs are returned
+    unchanged: the ``full().at[..., :f].set`` pattern would otherwise
+    const-fold a zero-width remainder into an empty captured constant, which
+    ``pallas_call`` rejects — and pow2 widths are the common case under the
+    degree-binned pipeline.
+    """
+    f = keys.shape[-1]
+    f2 = next_pow2(f)
+    if f2 == f:
+        return keys, vals
+    kbuf = jnp.full(keys.shape[:-1] + (f2,), fill_key, keys.dtype)
+    kbuf = kbuf.at[..., :f].set(keys)
+    if vals is None:
+        return kbuf, None
+    vbuf = jnp.zeros(vals.shape[:-1] + (f2,), vals.dtype)
+    return kbuf, vbuf.at[..., :f].set(vals)
+
+
 def _stage_masks(n: int, k: int, j: int) -> jnp.ndarray:
     """Ascending-direction mask for stage (k, j), shape (n//(2s), s).
 

@@ -20,8 +20,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.csr import COL_SENTINEL
-from .sortnet import bitonic_sort_pairs, segmented_run_sums, next_pow2
+from repro.core.csr import COL_SENTINEL, pad_row_ids
+from .sortnet import (bitonic_sort_pairs, segmented_run_sums, next_pow2,
+                      pad_to_pow2)
 
 
 def _kernel(rows_ref, a_rpt_ref, a_col_ref, a_val_ref, b_rpt_ref, b_col_ref,
@@ -44,11 +45,8 @@ def _kernel(rows_ref, a_rpt_ref, a_col_ref, a_val_ref, b_rpt_ref, b_col_ref,
     vals = jnp.where(valid, av[:, :, None] * b_val_ref[idx_b], 0.0)
 
     f = max_deg_a * max_deg_b
-    f2 = next_pow2(f)
-    cbuf = jnp.full((block_rows, f2), COL_SENTINEL, jnp.int32)
-    vbuf = jnp.zeros((block_rows, f2), jnp.float32)
-    cbuf = cbuf.at[:, :f].set(cols.reshape(block_rows, f))
-    vbuf = vbuf.at[:, :f].set(vals.reshape(block_rows, f))
+    cbuf, vbuf = pad_to_pow2(cols.reshape(block_rows, f),
+                             vals.reshape(block_rows, f), COL_SENTINEL)
     c_s, v_s = bitonic_sort_pairs(cbuf, vbuf)
     first, run_sums = segmented_run_sums(c_s, v_s, COL_SENTINEL)
     col_out_ref[...] = c_s
@@ -68,9 +66,7 @@ def spgemm_numeric_pallas(a_rpt, a_col, a_val, b_rpt, b_col, b_val, rows, *,
     r = rows.shape[0]
     nblocks = -(-r // block_rows)
     pad_r = nblocks * block_rows
-    rows_p = jnp.concatenate(
-        [rows.astype(jnp.int32), jnp.zeros(pad_r - r, jnp.int32)]
-    ) if pad_r != r else rows.astype(jnp.int32)
+    rows_p = pad_row_ids(rows, block_rows)
     rownnz_b = jnp.diff(b_rpt)
     f2 = next_pow2(max_deg_a * max_deg_b)
     cols, vals, first = pl.pallas_call(

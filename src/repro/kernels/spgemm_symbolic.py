@@ -21,18 +21,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.csr import COL_SENTINEL
-from .sortnet import bitonic_sort, next_pow2
+from repro.core.csr import COL_SENTINEL, pad_row_ids
+from .sortnet import bitonic_sort, pad_to_pow2
 
 
 def _kernel(rows_ref, a_rpt_ref, a_col_ref, b_rpt_ref, b_col_ref,
             rownnz_b_ref, z_ref, f_ref, *, block_samples: int,
-            max_deg_a: int, max_deg_b: int):
+            max_deg_a: int, max_deg_b: int, n_valid: int):
     rows = rows_ref[...]                                        # (BS,)
+    i = pl.program_id(0)
+    pos = i * block_samples + jax.lax.broadcasted_iota(
+        jnp.int32, (block_samples,), 0)
+    row_ok = pos < n_valid            # block-padding rows contribute nothing
     deg_a = a_rpt_ref[rows + 1] - a_rpt_ref[rows]
     ia = jax.lax.broadcasted_iota(jnp.int32, (block_samples, max_deg_a), 1)
     idx_a = jnp.clip(a_rpt_ref[rows][:, None] + ia, 0, a_col_ref.shape[0] - 1)
-    valid_a = ia < deg_a[:, None]
+    valid_a = row_ok[:, None] & (ia < deg_a[:, None])
     ks = jnp.where(valid_a, a_col_ref[idx_a], 0)                # (BS, DA)
 
     deg_b = jnp.where(valid_a, rownnz_b_ref[ks], 0)
@@ -42,10 +46,7 @@ def _kernel(rows_ref, a_rpt_ref, a_col_ref, b_rpt_ref, b_col_ref,
     valid = valid_a[:, :, None] & (ib < deg_b[:, :, None])
     cols = jnp.where(valid, b_col_ref[idx_b], COL_SENTINEL)
 
-    f2 = next_pow2(max_deg_a * max_deg_b)
-    buf = jnp.full((block_samples, f2), COL_SENTINEL, jnp.int32)
-    buf = buf.at[:, : max_deg_a * max_deg_b].set(
-        cols.reshape(block_samples, -1))
+    buf, _ = pad_to_pow2(cols.reshape(block_samples, -1), None, COL_SENTINEL)
     srt = bitonic_sort(buf)
     first = (srt[:, :1] != COL_SENTINEL).astype(jnp.int32)
     ascents = ((srt[:, 1:] != srt[:, :-1]) &
@@ -53,6 +54,87 @@ def _kernel(rows_ref, a_rpt_ref, a_col_ref, b_rpt_ref, b_col_ref,
     z_ref[...] = (first[:, 0] + ascents.sum(axis=-1)).sum(keepdims=True)
     f_ref[...] = valid.astype(jnp.int32).reshape(block_samples, -1).sum(
         axis=-1).sum(keepdims=True)
+
+
+def _fused_kernel(rows_ref, a_rpt_ref, a_col_ref, b_rpt_ref, b_col_ref,
+                  rownnz_b_ref, z_ref, f_ref, flop_ref, *, block_samples: int,
+                  max_deg_a: int, max_deg_b: int, n_valid: int):
+    """Fused Algorithm 1 + Algorithm 2 body for one block of sampled rows.
+
+    The A-row gather (``ks``/``valid_a``) and the B-degree lookup are shared:
+    FLOP-per-sampled-row is a lane reduction over ``deg_b`` while the same
+    ``deg_b`` drives the product-column expansion that the bitonic distinct
+    count consumes.  Rows at positions ≥ ``n_valid`` are block padding and
+    contribute nothing (no duplicate-correction pass needed).
+    """
+    i = pl.program_id(0)
+    pos = i * block_samples + jax.lax.broadcasted_iota(
+        jnp.int32, (block_samples,), 0)
+    row_ok = pos < n_valid                                      # (BS,)
+    rows = rows_ref[...]
+    deg_a = a_rpt_ref[rows + 1] - a_rpt_ref[rows]
+    ia = jax.lax.broadcasted_iota(jnp.int32, (block_samples, max_deg_a), 1)
+    idx_a = jnp.clip(a_rpt_ref[rows][:, None] + ia, 0, a_col_ref.shape[0] - 1)
+    valid_a = row_ok[:, None] & (ia < deg_a[:, None])
+    ks = jnp.where(valid_a, a_col_ref[idx_a], 0)                # (BS, DA)
+
+    deg_b = jnp.where(valid_a, rownnz_b_ref[ks], 0)
+    flop = deg_b.sum(axis=1).astype(jnp.int32)                  # (BS,)
+
+    ib = jax.lax.broadcasted_iota(
+        jnp.int32, (block_samples, max_deg_a, max_deg_b), 2)
+    idx_b = jnp.clip(b_rpt_ref[ks][:, :, None] + ib, 0, b_col_ref.shape[0] - 1)
+    valid = valid_a[:, :, None] & (ib < deg_b[:, :, None])
+    cols = jnp.where(valid, b_col_ref[idx_b], COL_SENTINEL)
+
+    buf, _ = pad_to_pow2(cols.reshape(block_samples, -1), None, COL_SENTINEL)
+    srt = bitonic_sort(buf)
+    first = (srt[:, :1] != COL_SENTINEL).astype(jnp.int32)
+    ascents = ((srt[:, 1:] != srt[:, :-1]) &
+               (srt[:, 1:] != COL_SENTINEL)).astype(jnp.int32)
+    z_ref[...] = (first[:, 0] + ascents.sum(axis=-1)).sum(keepdims=True)
+    f_ref[...] = flop.sum(keepdims=True)
+    flop_ref[...] = flop
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "max_deg_a", "max_deg_b", "block_samples", "interpret"))
+def fused_flop_symbolic_pallas(a_rpt, a_col, b_rpt, b_col, rows, *,
+                               max_deg_a: int, max_deg_b: int,
+                               block_samples: int = 8, interpret: bool = True):
+    """One pallas_call → (z*, f*, flop-per-sampled-row (S,)).
+
+    The binned predictor issues this once per bucket: the sampled symbolic
+    pass and the sampled rows' FLOP share a single A-row gather instead of
+    the two separate kernel sweeps of the unfused path.
+    """
+    s = rows.shape[0]
+    nblocks = -(-s // block_samples)
+    pad_s = nblocks * block_samples
+    rows_p = pad_row_ids(rows, block_samples)  # masked in-kernel via n_valid
+    rownnz_b = jnp.diff(b_rpt)
+    z_b, f_b, flop = pl.pallas_call(
+        functools.partial(_fused_kernel, block_samples=block_samples,
+                          max_deg_a=max_deg_a, max_deg_b=max_deg_b,
+                          n_valid=s),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block_samples,), lambda i: (i,)),  # rows: blocked
+            pl.BlockSpec(memory_space=pl.ANY),               # a_rpt
+            pl.BlockSpec(memory_space=pl.ANY),               # a_col
+            pl.BlockSpec(memory_space=pl.ANY),               # b_rpt
+            pl.BlockSpec(memory_space=pl.ANY),               # b_col
+            pl.BlockSpec(memory_space=pl.ANY),               # rownnz_b
+        ],
+        out_specs=[pl.BlockSpec((1,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,)),
+                   pl.BlockSpec((block_samples,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((nblocks,), jnp.int32),
+                   jax.ShapeDtypeStruct((nblocks,), jnp.int32),
+                   jax.ShapeDtypeStruct((pad_s,), jnp.int32)],
+        interpret=interpret,
+    )(rows_p, a_rpt, a_col, b_rpt, b_col, rownnz_b)
+    return z_b.sum(), f_b.sum(), flop[:s]
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -63,15 +145,12 @@ def sampled_symbolic_pallas(a_rpt, a_col, b_rpt, b_col, rows, *,
     """Returns (z*, f*) — exact sampled NNZ and sampled FLOP (int32 scalars)."""
     s = rows.shape[0]
     nblocks = -(-s // block_samples)
-    pad_s = nblocks * block_samples
-    # pad with repeats of row 0, subtract its duplicate contribution after
-    rows_p = jnp.concatenate(
-        [rows.astype(jnp.int32),
-         jnp.zeros(pad_s - s, jnp.int32)]) if pad_s != s else rows.astype(jnp.int32)
+    rows_p = pad_row_ids(rows, block_samples)  # masked in-kernel via n_valid
     rownnz_b = jnp.diff(b_rpt)
     z_b, f_b = pl.pallas_call(
         functools.partial(_kernel, block_samples=block_samples,
-                          max_deg_a=max_deg_a, max_deg_b=max_deg_b),
+                          max_deg_a=max_deg_a, max_deg_b=max_deg_b,
+                          n_valid=s),
         grid=(nblocks,),
         in_specs=[
             pl.BlockSpec((block_samples,), lambda i: (i,)),  # rows: blocked
@@ -87,26 +166,4 @@ def sampled_symbolic_pallas(a_rpt, a_col, b_rpt, b_col, rows, *,
                    jax.ShapeDtypeStruct((nblocks,), jnp.int32)],
         interpret=interpret,
     )(rows_p, a_rpt, a_col, b_rpt, b_col, rownnz_b)
-    z, f = z_b.sum(), f_b.sum()
-    if pad_s != s:  # remove the padded duplicates of row 0
-        from repro.core.predictor import gather_sampled_products, count_distinct_sorted
-        # cheap correction: recompute row 0's (z, f) once in jnp
-        pad = pad_s - s
-        r0 = jnp.zeros((1,), jnp.int32)
-        deg_a0 = a_rpt[1] - a_rpt[0]
-        ia = jnp.arange(max_deg_a, dtype=jnp.int32)
-        idx_a = jnp.clip(a_rpt[0] + ia, 0, a_col.shape[0] - 1)
-        va = ia < deg_a0
-        ks = jnp.where(va, a_col[idx_a], 0)
-        deg_b = jnp.where(va, rownnz_b[ks], 0)
-        ib = jnp.arange(max_deg_b, dtype=jnp.int32)
-        idx_b = jnp.clip(b_rpt[ks][:, None] + ib[None, :], 0, b_col.shape[0] - 1)
-        vb = va[:, None] & (ib[None, :] < deg_b[:, None])
-        cols0 = jnp.where(vb, b_col[idx_b], COL_SENTINEL).reshape(1, -1)
-        srt0 = jnp.sort(cols0, axis=-1)
-        z0 = ((srt0[:, :1] != COL_SENTINEL).astype(jnp.int32).sum() +
-              ((srt0[:, 1:] != srt0[:, :-1]) & (srt0[:, 1:] != COL_SENTINEL)).sum())
-        f0 = vb.sum()
-        z = z - pad * z0
-        f = f - pad * f0
-    return z, f
+    return z_b.sum(), f_b.sum()

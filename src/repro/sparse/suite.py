@@ -95,6 +95,33 @@ def mini_suite(scale: int = 20) -> list[tuple[str, CSR]]:
     return out
 
 
+def degree_skew(m: CSR) -> dict:
+    """Row-degree skew stats — what decides whether degree binning pays.
+
+    ``skew`` is max/mean row degree: ~1 for uniform families (er, band, fem —
+    global padding is already tight) and ≫1 for power-law/rmat (one hub row
+    inflates every global-pad buffer; see ``repro.core.binning``).
+    """
+    deg = np.diff(m.rpt).astype(np.float64)
+    mean = float(deg.mean()) if deg.size else 0.0
+    mx = float(deg.max()) if deg.size else 0.0
+    p99 = float(np.percentile(deg, 99)) if deg.size else 0.0
+    return dict(max_deg=int(mx), mean_deg=round(mean, 3), p99_deg=int(p99),
+                skew=round(mx / max(mean, 1e-9), 3))
+
+
+def family_degree_skew(names: list[str] | None = None) -> dict[str, dict]:
+    """Per-suite-entry skew stats, keyed by matrix name (family recorded)."""
+    sel = names or [e.name for e in SUITE]
+    out = {}
+    for name in sel:
+        entry = next(e for e in SUITE if e.name == name)
+        stats = degree_skew(get_matrix(name))
+        stats["family"] = entry.family
+        out[name] = stats
+    return out
+
+
 def iter_cases(names: list[str] | None = None) -> Iterator[tuple[str, str, CSR, CSR]]:
     """All (A, B) pairs with the paper's reshape rule applied — 625 by default."""
     sel = names or [e.name for e in SUITE]

@@ -1,0 +1,234 @@
+"""Degree-binned pipeline vs global-pad: plan invariants + exact equality.
+
+The binned paths must be *bitwise* interchangeable with the global-pad paths
+(same eq. 2 / eq. 4 semantics, same numeric output), on mixed-skew inputs and
+the hub-row / empty-bucket edge cases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sparse import random as sprand
+from repro.sparse.formats import CSR, spgemm_dense_oracle
+from repro.core import binning, csr, predictor, spgemm
+from repro.core.flop import flop_per_row
+
+
+def _mixed_skew_cases():
+    return [
+        ("pl", sprand.power_law(700, 700, 5, 1.5, seed=21),
+         sprand.power_law(700, 700, 4, 1.6, seed=22)),
+        ("band", sprand.banded(500, 500, 10, 14, seed=23),
+         sprand.banded(500, 500, 8, 12, seed=24)),
+        ("er", sprand.erdos_renyi(400, 400, 4, seed=25),
+         sprand.erdos_renyi(400, 400, 3, seed=26)),
+        ("pl_x_band", sprand.power_law(500, 500, 5, 1.4, seed=27),
+         sprand.banded(500, 500, 8, 12, seed=28)),
+    ]
+
+
+def _hub_matrix(m=400, hub_deg=200):
+    """Degree-2 matrix with a single hub row — worst case for global pad."""
+    rng = np.random.default_rng(0)
+    rows = np.repeat(np.arange(1, m), 2)
+    cols = rng.integers(0, m, rows.size)
+    hub_cols = rng.choice(m, hub_deg, replace=False)
+    rows = np.concatenate([np.zeros(hub_deg, np.int64), rows])
+    cols = np.concatenate([hub_cols, cols])
+    vals = rng.standard_normal(rows.size).astype(np.float32)
+    return CSR.from_coo(rows, cols, vals, (m, m))
+
+
+# --------------------------------------------------------------------------- #
+# plan invariants
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name,a,b", _mixed_skew_cases(),
+                         ids=[c[0] for c in _mixed_skew_cases()])
+def test_plan_partitions_rows_and_bounds_degrees(name, a, b):
+    plan = binning.build_plan(a, b)
+    allrows = np.sort(np.concatenate([bk.rows for bk in plan.buckets]))
+    np.testing.assert_array_equal(allrows, np.arange(a.nrows))
+    deg_a, dbmax, _ = binning.row_widths(a.rpt, a.col, np.diff(b.rpt))
+    for i, bk in enumerate(plan.buckets):
+        assert int(deg_a[bk.rows].max()) <= bk.deg_a
+        assert int(dbmax[bk.rows].max()) <= bk.deg_b
+        assert bk.block_rows * binning.ceil_pow2(bk.width) <= \
+            binning.DEFAULT_LANE_BUDGET or bk.block_rows == 1
+        np.testing.assert_array_equal(plan.row_bucket[bk.rows], i)
+
+
+def test_plan_never_processes_more_lanes_than_global():
+    for _, a, b in _mixed_skew_cases():
+        plan = binning.build_plan(a, b)
+        assert plan.lanes <= plan.global_lanes
+
+
+def test_hub_row_isolated_and_cheap():
+    a = _hub_matrix()
+    plan = binning.build_plan(a, a)
+    # the hub must not drag the low-degree rows up to its width
+    assert plan.lane_reduction > 5.0
+    hub_bucket = plan.buckets[int(plan.row_bucket[0])]
+    assert hub_bucket.n_rows < 50  # hub rides in a small top bucket
+
+
+def test_subset_preserves_duplicates_and_empty_buckets():
+    a = _hub_matrix()
+    plan = binning.build_plan(a, a)
+    assert len(plan.buckets) >= 2           # hub separates from the bulk
+    rows = np.array([5, 5, 7])              # duplicates (sampling w/ replace)
+    sub = plan.subset(rows)
+    assert sum(s.size for s in sub) == rows.size
+    # all samples come from row 5/7's bucket(s); the hub bucket stays empty
+    assert sub[int(plan.row_bucket[0])].size == 0
+    hub_sub = plan.subset(np.array([0]))[int(plan.row_bucket[0])]
+    assert 0 in hub_sub
+
+
+# --------------------------------------------------------------------------- #
+# binned predictor == global predictor (bitwise)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name,a,b", _mixed_skew_cases(),
+                         ids=[c[0] for c in _mixed_skew_cases()])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_binned_predict_matches_global(name, a, b, use_kernel):
+    ad, bd = csr.to_device(a), csr.to_device(b)
+    mda, mdb = int(a.row_nnz.max()), int(b.row_nnz.max())
+    plan = binning.build_plan(a, b)
+    rows = predictor.draw_sample_rows(
+        jax.random.PRNGKey(3), a.nrows, predictor.static_sample_num(a.nrows))
+    pg = predictor.proposed_predict(ad, bd, rows, mda, mdb)
+    pb = predictor.proposed_predict_binned(ad, bd, rows, plan,
+                                           use_kernel=use_kernel)
+    assert int(pg.sampled_nnz) == int(pb.sampled_nnz)
+    assert int(pg.sampled_flop) == int(pb.sampled_flop)
+    assert float(pg.nnz_total) == float(pb.nnz_total)
+    assert float(pg.compression_ratio) == float(pb.compression_ratio)
+    np.testing.assert_array_equal(np.asarray(pg.structure),
+                                  np.asarray(pb.structure))
+
+
+def test_binned_reference_predict_matches_global():
+    for _, a, b in _mixed_skew_cases()[:2]:
+        ad, bd = csr.to_device(a), csr.to_device(b)
+        mda, mdb = int(a.row_nnz.max()), int(b.row_nnz.max())
+        plan = binning.build_plan(a, b)
+        rows = predictor.draw_sample_rows(jax.random.PRNGKey(1), a.nrows, 40)
+        rg = predictor.reference_predict(ad, bd, rows, mda, mdb)
+        rb = predictor.reference_predict_binned(ad, bd, rows, plan)
+        assert float(rg.nnz_total) == float(rb.nnz_total)
+        np.testing.assert_array_equal(np.asarray(rg.structure),
+                                      np.asarray(rb.structure))
+
+
+def test_binned_predict_hub_row_case():
+    a = _hub_matrix()
+    ad = csr.to_device(a)
+    mda = int(a.row_nnz.max())
+    plan = binning.build_plan(a, a)
+    rows = jnp.asarray(np.array([0, 1, 2, 399], np.int32))  # hub sampled
+    pg = predictor.proposed_predict(ad, ad, rows, mda, mda)
+    pb = predictor.proposed_predict_binned(ad, ad, rows, plan)
+    assert float(pg.nnz_total) == float(pb.nnz_total)
+
+
+# --------------------------------------------------------------------------- #
+# binned numeric == global numeric (bitwise at uniform capacity)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name,a,b", _mixed_skew_cases(),
+                         ids=[c[0] for c in _mixed_skew_cases()])
+def test_binned_spgemm_bitwise_equal(name, a, b):
+    ad, bd = csr.to_device(a), csr.to_device(b)
+    mda, mdb = int(a.row_nnz.max()), int(b.row_nnz.max())
+    plan = binning.build_plan(a, b)
+    floprc, _ = flop_per_row(ad, bd)
+    rows = predictor.draw_sample_rows(jax.random.PRNGKey(0), a.nrows, 60)
+    pred = predictor.proposed_predict(ad, bd, rows, mda, mdb)
+    alloc = predictor.AllocationPlan.from_prediction(
+        np.asarray(pred.structure), np.asarray(floprc), safety=1.3)
+    og = spgemm.spgemm(ad, bd, row_capacity=alloc.row_capacity,
+                       max_deg_a=mda, max_deg_b=mdb, block_rows=64)
+    ob = spgemm.spgemm_binned(ad, bd, plan, alloc=alloc.row_capacity)
+    np.testing.assert_array_equal(np.asarray(og.col), np.asarray(ob.col))
+    np.testing.assert_array_equal(np.asarray(og.val), np.asarray(ob.val))
+    np.testing.assert_array_equal(np.asarray(og.row_nnz),
+                                  np.asarray(ob.row_nnz))
+    assert int(og.overflow) == int(ob.overflow)
+
+
+def test_binned_spgemm_kernel_route_matches_jnp_route():
+    _, a, b = _mixed_skew_cases()[0]
+    ad, bd = csr.to_device(a), csr.to_device(b)
+    plan = binning.build_plan(a, b)
+    floprc, _ = flop_per_row(ad, bd)
+    rows = predictor.draw_sample_rows(jax.random.PRNGKey(0), a.nrows, 60)
+    pred = predictor.proposed_predict_binned(ad, bd, rows, plan)
+    balloc = predictor.BinnedAllocationPlan.from_prediction(
+        plan, np.asarray(pred.structure), np.asarray(floprc), safety=1.5)
+    oj = spgemm.spgemm_binned(ad, bd, plan, alloc=balloc, use_kernel=False)
+    ok = spgemm.spgemm_binned(ad, bd, plan, alloc=balloc, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(oj.col), np.asarray(ok.col))
+    np.testing.assert_allclose(np.asarray(oj.val), np.asarray(ok.val),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(oj.row_nnz),
+                                  np.asarray(ok.row_nnz))
+    assert int(oj.overflow) == int(ok.overflow)
+
+
+def test_binned_spgemm_values_correct_with_binned_alloc():
+    """Per-bucket capacities: smaller buffers, same product values."""
+    a = _hub_matrix(300, 120)
+    ad = csr.to_device(a)
+    plan = binning.build_plan(a, a)
+    floprc, _ = flop_per_row(ad, ad)
+    rows = predictor.draw_sample_rows(jax.random.PRNGKey(2), a.nrows, 50)
+    pred = predictor.proposed_predict_binned(ad, ad, rows, plan)
+    balloc = predictor.BinnedAllocationPlan.from_prediction(
+        plan, np.asarray(pred.structure), np.asarray(floprc), safety=2.0)
+    out = spgemm.spgemm_binned(ad, ad, plan, alloc=balloc)
+    assert int(out.overflow) == 0
+    np.testing.assert_allclose(np.asarray(spgemm.dense_of(out, a.ncols)),
+                               spgemm_dense_oracle(a, a), rtol=1e-4, atol=1e-4)
+    # the binned total allocation must not exceed the uniform-cap one
+    uni = predictor.AllocationPlan.from_prediction(
+        np.asarray(pred.structure), np.asarray(floprc), safety=2.0)
+    assert balloc.total_capacity <= uni.row_capacity * a.nrows
+    assert max(balloc.bucket_capacities) <= uni.row_capacity
+
+
+def test_empty_rows_and_single_bucket_edge():
+    """Matrix with empty rows (deg 0) still round-trips the binned paths."""
+    rpt = np.array([0, 0, 2, 2, 4, 4], np.int64)
+    col = np.array([1, 3, 0, 2], np.int32)
+    val = np.ones(4, np.float32)
+    a = CSR(rpt=rpt, col=col, val=val, shape=(5, 5))
+    ad = csr.to_device(a)
+    plan = binning.build_plan(a, a, min_rows=1)
+    mda = int(a.row_nnz.max())
+    og = spgemm.spgemm(ad, ad, row_capacity=8, max_deg_a=mda, max_deg_b=mda)
+    ob = spgemm.spgemm_binned(ad, ad, plan, alloc=8)
+    np.testing.assert_array_equal(np.asarray(og.col), np.asarray(ob.col))
+    np.testing.assert_array_equal(np.asarray(og.row_nnz),
+                                  np.asarray(ob.row_nnz))
+
+
+def test_partition_binned_cost_weights():
+    from repro.core.partition import balanced_contiguous, binned_cost_weights
+    a = _hub_matrix()
+    plan = binning.build_plan(a, a)
+    w = binned_cost_weights(plan)
+    assert w.shape == (a.nrows,)
+    assert w[0] == max(bk.width for bk in plan.buckets)  # hub pays hub width
+    part = balanced_contiguous(w, 4)
+    assert part.imbalance >= 1.0
+
+
+def test_compile_cache_signature_reuse():
+    """Equal-shaped matrices from the same family share every signature —
+    the static half of the jit cache key (full reuse additionally needs
+    matching bucket populations; see core.binning docstring)."""
+    a1 = sprand.banded(400, 400, 8, 12, seed=31)
+    a2 = sprand.banded(400, 400, 8, 12, seed=32)
+    p1 = binning.build_plan(a1, a1)
+    p2 = binning.build_plan(a2, a2)
+    assert p1.signatures() == p2.signatures()

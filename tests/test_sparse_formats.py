@@ -1,7 +1,11 @@
 """CSR substrate: roundtrips, the paper's reshape rule, generators."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal CI image — deterministic tests must still run
+    from hypothesis_shim import given, settings, st
 
 from repro.sparse.formats import CSR, match_dims
 from repro.sparse import random as sprand
