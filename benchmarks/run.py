@@ -16,14 +16,15 @@ from . import common
 
 def main() -> None:
     from . import (table2_suite, table3_accuracy, fig2_overhead,
-                   kernels_bench, binning_bench, roofline_bench,
-                   moe_capacity_bench, partition_bench)
+                   kernels_bench, binning_bench, accumulator_bench,
+                   roofline_bench, moe_capacity_bench, partition_bench)
     sections = [
         ("table2 (suite stats)", table2_suite.run),
         ("table3 (625-case accuracy)", table3_accuracy.run),
         ("fig2 (prediction overhead)", fig2_overhead.run),
         ("kernels (pallas microbench)", kernels_bench.run),
         ("binning (binned vs global-pad)", binning_bench.run),
+        ("accumulators (spa vs esc routes)", accumulator_bench.run),
         ("roofline (dry-run cells)", roofline_bench.run),
         ("moe capacity (beyond-paper)", moe_capacity_bench.run),
         ("partition (load balance)", partition_bench.run),
@@ -39,7 +40,8 @@ def main() -> None:
             traceback.print_exc()
     out = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
     common.write_bench_json(os.path.abspath(out),
-                            extra=dict(binning=binning_bench.summary()))
+                            extra=dict(binning=binning_bench.summary(),
+                                       accumulators=accumulator_bench.summary()))
     print(f"\nwrote {os.path.abspath(out)}")
     if failed:
         sys.exit(1)

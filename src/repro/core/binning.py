@@ -21,7 +21,12 @@ This module is the host-side planner (launch-time numpy, like
     ``deg_a``/``deg_b`` are the bucket's exact max degrees by default
     (``deg_align > 1`` opts into quantized bounds, see :func:`round_deg`) and
     ``block_rows`` is chosen so ``block_rows · next_pow2(deg_a·deg_b)`` stays
-    under ``lane_budget`` (the VMEM envelope of the Pallas kernels).
+    under ``lane_budget`` (the VMEM envelope of the Pallas kernels);
+  * each bucket is additionally stamped with an accumulator ``route``
+    (DESIGN.md §5): ``"esc"`` — the bitonic sort backend — or ``"spa"`` —
+    bitmask-popcount (symbolic) / dense column-tiled accumulator (numeric) —
+    chosen at plan time by the :func:`route_costs` model so the executors
+    dispatch with zero runtime branching.
 
 Compile-cache contract: the device executors are ``jax.jit``-cached on the
 bucket's static shapes — ``RowBucket.signature`` (= the static argnames)
@@ -41,10 +46,27 @@ DEFAULT_LANE_BUDGET = 1 << 17   # lanes per kernel block: BS·F2 ≤ budget
 DEFAULT_MAX_BLOCK_ROWS = 256
 DEFAULT_MIN_ROWS = 32           # coalesce buckets smaller than this
 
+# Accumulator routes (DESIGN.md §5).  ESC = expand/sort/compress: the bitonic
+# sort + adjacent-unique (symbolic) / segmented run-sum (numeric) backend.
+# SPA = accumulator backend: bitmask-popcount distinct count (symbolic) and a
+# dense column-tiled scatter accumulator (numeric).
+ROUTE_ESC = "esc"
+ROUTE_SPA = "spa"
+ROUTES = (ROUTE_ESC, ROUTE_SPA)
+
+SPA_MIN_TILE = 128              # one VPU lane row — never tile finer
+DEFAULT_SPA_MIN_BLOCK_ROWS = 64  # auto-route gate: dense tiles need tall
+                                 # blocks to amortize the per-tile touch
+
 
 def ceil_pow2(n: int) -> int:
     """Smallest power of two ≥ max(1, n)."""
     return 1 << max(0, (int(n) - 1).bit_length())
+
+
+def floor_pow2(n: int) -> int:
+    """Largest power of two ≤ max(1, n)."""
+    return 1 << (max(1, int(n)).bit_length() - 1)
 
 
 def round_deg(d: int, align: int = 1) -> int:
@@ -69,6 +91,10 @@ class RowBucket:
     deg_a: int            # bound on A-row degree within the bucket
     deg_b: int            # bound on referenced-B-row degree
     block_rows: int       # grid block height for this bucket's kernels
+    route: str = ROUTE_ESC  # accumulator backend: "esc" (sort) or "spa"
+    tile_n: int = 0       # SPA dense-accumulator column tile (0 on esc)
+    n_tiles: int = 0      # SPA column-tile count (0 on esc)
+    span: int = 0         # bound on per-row product-column extent (0 = ncols)
 
     @property
     def n_rows(self) -> int:
@@ -85,9 +111,10 @@ class RowBucket:
         return self.n_rows * self.width
 
     @property
-    def signature(self) -> tuple[int, int, int]:
+    def signature(self) -> tuple[int, int, int, str, int, int]:
         """The static shape tuple device executors specialize on."""
-        return (self.deg_a, self.deg_b, self.block_rows)
+        return (self.deg_a, self.deg_b, self.block_rows, self.route,
+                self.tile_n, self.span)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,9 +142,16 @@ class BinningPlan:
         """How many× fewer lanes the binned pipeline touches (≥ 1 good)."""
         return self.global_lanes / max(1, self.lanes)
 
-    def signatures(self) -> tuple[tuple[int, int, int], ...]:
+    def signatures(self) -> tuple[tuple[int, int, int, str, int, int], ...]:
         """Sorted unique bucket signatures — the compile-cache key set."""
         return tuple(sorted({b.signature for b in self.buckets}))
+
+    def route_rows(self) -> dict:
+        """Rows per accumulator route — the planner's routing decision."""
+        out = {r: 0 for r in ROUTES}
+        for b in self.buckets:
+            out[b.route] += b.n_rows
+        return out
 
     def inverse_perm(self) -> np.ndarray:
         """Permutation restoring row-id order from bucket-concatenation order.
@@ -147,6 +181,8 @@ class BinningPlan:
             signatures=[list(s) for s in self.signatures()],
             bucket_rows=[b.n_rows for b in self.buckets],
             bucket_widths=[b.width for b in self.buckets],
+            bucket_routes=[b.route for b in self.buckets],
+            route_rows=self.route_rows(),
         )
 
 
@@ -156,6 +192,103 @@ def _pick_block_rows(width: int, lane_budget: int, max_block_rows: int) -> int:
     fit = max(1, lane_budget // f2)
     blk = 1 << (fit.bit_length() - 1)          # floor to pow2
     return int(max(1, min(max_block_rows, blk)))
+
+
+# --------------------------------------------------------------------------- #
+# Accumulator routing (DESIGN.md §5): sort/ESC vs bitmask/dense-SPA per bucket.
+# --------------------------------------------------------------------------- #
+def row_spans(a_rpt: np.ndarray, a_col: np.ndarray, b_rpt: np.ndarray,
+              b_col: np.ndarray) -> np.ndarray:
+    """Per-output-row product-column extent ``hi - lo + 1`` (≥ 1).
+
+    The SPA kernels address their bitmask words / dense tile relative to
+    each row's minimum product column, so their static lane count is the
+    bucket's worst *extent*, not ``ncols_b`` — for banded/FEM structure the
+    extent is the band width, orders of magnitude below the column count.
+    Rows with no products get extent 1.
+    """
+    a_rpt = np.asarray(a_rpt, dtype=np.int64)
+    a_col = np.asarray(a_col, dtype=np.int64)
+    b_rpt = np.asarray(b_rpt, dtype=np.int64)
+    b_col = np.asarray(b_col, dtype=np.int64)
+    m = a_rpt.size - 1
+    mb = b_rpt.size - 1
+    big = np.int64(np.iinfo(np.int32).max)
+    b_lo = np.full(mb, big)
+    b_hi = np.full(mb, -1, dtype=np.int64)
+    ne_b = np.diff(b_rpt) > 0
+    if b_rpt[-1]:
+        starts = b_rpt[:-1][ne_b]
+        b_lo[ne_b] = np.minimum.reduceat(b_col[: b_rpt[-1]], starts)
+        b_hi[ne_b] = np.maximum.reduceat(b_col[: b_rpt[-1]], starts)
+    lo = np.full(m, big)
+    hi = np.full(m, -1, dtype=np.int64)
+    ne_a = np.diff(a_rpt) > 0
+    if a_rpt[-1]:
+        ks = np.clip(a_col[: a_rpt[-1]], 0, mb - 1)
+        starts = a_rpt[:-1][ne_a]
+        lo[ne_a] = np.minimum.reduceat(b_lo[ks], starts)
+        hi[ne_a] = np.maximum.reduceat(b_hi[ks], starts)
+    return np.maximum(1, hi - lo + 1)
+
+
+def spa_tile(span: int, lane_budget: int) -> tuple[int, int]:
+    """SPA dense-accumulator column tiling: ``(tile_n, n_tiles)``.
+
+    One tile covering the pow2-padded column *extent* when it fits the VMEM
+    lane budget (with at least a minimal block height), else the largest
+    pow2 tile that does; ``n_tiles`` tiles then cover ``next_pow2(span)``
+    exactly.
+    """
+    n_pad = ceil_pow2(max(1, int(span)))
+    cap = max(SPA_MIN_TILE, floor_pow2(max(1, lane_budget // 8)))
+    tile = min(max(n_pad, SPA_MIN_TILE), cap)
+    return tile, -(-n_pad // tile)
+
+
+def route_costs(deg_a: int, deg_b: int, ncols_b: int, span: int | None = None,
+                lane_budget: int = DEFAULT_LANE_BUDGET) -> dict:
+    """Per-row lane-op cost model deciding a bucket's accumulator route.
+
+    ESC pays the bitonic network over the pow2-rounded gather width ``F2``
+    in both phases — ``~3·w·log2²(F2)`` lane-ops (symbolic sort + the
+    pricier key/value sort of the numeric phase).  SPA pays the
+    broadcast-compare accumulation against its column extent: ``w`` products
+    each checked against ``extent/32`` bitmask words (symbolic) and
+    ``extent`` dense tile lanes (numeric), plus the tile touch itself.
+    Constant factors are coarse — the regimes the router must separate
+    (banded/FEM extent ≪ log²w·32 vs ER/power-law extent ≈ ncols) differ by
+    well over 2×.
+    """
+    w = max(1, int(deg_a) * int(deg_b))
+    f2 = ceil_pow2(w)
+    lg = max(1, f2.bit_length() - 1)
+    span = int(ncols_b if span is None else min(span, ncols_b))
+    tile_n, n_tiles = spa_tile(span, lane_budget)
+    cols = n_tiles * tile_n
+    spa = w * (cols + -(-cols // 32)) + cols
+    return dict(esc=3 * w * lg * lg, spa=spa, tile_n=tile_n, n_tiles=n_tiles,
+                span=span)
+
+
+def choose_route(deg_a: int, deg_b: int, ncols_b: int, span: int | None = None,
+                 *, lane_budget: int = DEFAULT_LANE_BUDGET,
+                 spa_min_block_rows: int = DEFAULT_SPA_MIN_BLOCK_ROWS
+                 ) -> tuple[str, int, int]:
+    """``(route, tile_n, n_tiles)`` for one bucket's static bounds.
+
+    SPA is picked iff it wins the :func:`route_costs` comparison AND the
+    dense tile leaves at least ``spa_min_block_rows`` rows per kernel block
+    under the VMEM lane budget — a wide accumulator shared by only a handful
+    of rows spends its time touching the tile, not accumulating, so such
+    buckets stay on the sort path (this is also what keeps wide power-law
+    column spaces on ESC).
+    """
+    c = route_costs(deg_a, deg_b, ncols_b, span, lane_budget)
+    spa_block = floor_pow2(max(1, lane_budget // c["tile_n"]))
+    if spa_block < spa_min_block_rows or c["spa"] >= c["esc"]:
+        return ROUTE_ESC, 0, 0
+    return ROUTE_SPA, c["tile_n"], c["n_tiles"]
 
 
 def row_widths(a_rpt: np.ndarray, a_col: np.ndarray,
@@ -181,12 +314,22 @@ def row_widths(a_rpt: np.ndarray, a_col: np.ndarray,
 def build_plan(a, b, *, lane_budget: int = DEFAULT_LANE_BUDGET,
                max_block_rows: int = DEFAULT_MAX_BLOCK_ROWS,
                min_rows: int = DEFAULT_MIN_ROWS,
-               deg_align: int = 1) -> BinningPlan:
+               deg_align: int = 1, route: str = "auto",
+               spa_min_block_rows: int = DEFAULT_SPA_MIN_BLOCK_ROWS
+               ) -> BinningPlan:
     """Plan the binned execution of ``C = A·B``.
 
     ``a``/``b`` may be host ``CSR`` or device ``CSRDevice`` — only the int
     index arrays are read (pulled to host; planning is a launch-time step).
+
+    ``route`` selects the accumulator backend per bucket: ``"auto"`` applies
+    the :func:`choose_route` cost model; ``"esc"``/``"spa"`` force every
+    bucket onto one backend (forced SPA falls back to column tiling instead
+    of being rejected by the VMEM gate — outputs are route-invariant either
+    way, see DESIGN.md §5).
     """
+    if route not in ("auto",) + ROUTES:
+        raise ValueError(f"unknown route {route!r}")
     a_rpt = np.asarray(a.rpt)
     a_col = np.asarray(a.col)
     b_rpt = np.asarray(b.rpt)
@@ -231,13 +374,39 @@ def build_plan(a, b, *, lane_budget: int = DEFAULT_LANE_BUDGET,
         else:
             merged.append(carry)        # trailing hub bucket stays isolated
 
+    ncols_b = int(b.shape[1])
+    # forced-ESC plans never read extents — skip the O(nnz) host pass
+    spans = (row_spans(a_rpt, a_col, b_rpt, np.asarray(b.col))
+             if route != ROUTE_ESC else None)
     buckets = []
     row_bucket = np.zeros(m, dtype=np.int32)
     for i, ids in enumerate(merged):
         ids = np.sort(ids).astype(np.int32)
         da, db = bounds(ids)
+        # pow2-rounded extent bound: stable across same-family matrices, so
+        # span does not fragment the signature (compile-cache) set
+        span = min(ceil_pow2(int(spans[ids].max()))
+                   if spans is not None and ids.size else 1,
+                   ceil_pow2(ncols_b))
         blk = _pick_block_rows(da * db, lane_budget, max_block_rows)
-        buckets.append(RowBucket(rows=ids, deg_a=da, deg_b=db, block_rows=blk))
+        if route == ROUTE_ESC:
+            rt, tile, ntiles = ROUTE_ESC, 0, 0
+        elif route == ROUTE_SPA:
+            rt = ROUTE_SPA
+            tile, ntiles = spa_tile(span, lane_budget)
+        else:
+            rt, tile, ntiles = choose_route(
+                da, db, ncols_b, span, lane_budget=lane_budget,
+                spa_min_block_rows=spa_min_block_rows)
+        if rt == ROUTE_SPA:
+            # the block must also hold the dense column tile under the budget
+            blk = int(max(1, min(blk, floor_pow2(
+                max(1, lane_budget // tile)))))
+        else:
+            span = 0                 # ESC kernels never specialize on extent
+        buckets.append(RowBucket(rows=ids, deg_a=da, deg_b=db, block_rows=blk,
+                                 route=rt, tile_n=tile, n_tiles=ntiles,
+                                 span=span))
         row_bucket[ids] = i
 
     gda = int(deg_a.max()) if m else 1

@@ -52,6 +52,47 @@ class CSRDevice:
         return jnp.diff(self.rpt)
 
 
+def expand_products(a: "CSRDevice", b: "CSRDevice", rows: jax.Array,
+                    max_deg_a: int, max_deg_b: int, *,
+                    rownnz_b: jax.Array | None = None,
+                    with_values: bool = False):
+    """Expand the intermediate-product columns of ``rows`` of ``C = A·B`` into
+    a static ``(S, max_deg_a·max_deg_b)`` buffer — THE shared gather of both
+    phases (symbolic predictor and numeric SpGEMM) and of every accumulator
+    route (sort/ESC, bitmask, dense-SPA).
+
+    Returns ``(cols, vals, valid)``:
+
+      * ``cols``  — int32, padded with :data:`COL_SENTINEL`;
+      * ``vals``  — float32 value products (``a_ik·b_kj``), 0 on padding —
+        ``None`` unless ``with_values`` (the symbolic phase never reads them);
+      * ``valid`` — bool mask of real (non-padding) product slots.
+
+    ``rownnz_b`` (``= jnp.diff(b.rpt)``) may be passed in so bucket-iterated
+    callers hoist the diff out of their per-bucket calls.
+    """
+    s = rows.shape[0]
+    deg_a = (a.rpt[rows + 1] - a.rpt[rows]).astype(jnp.int32)             # (S,)
+    ia = jnp.arange(max_deg_a, dtype=jnp.int32)
+    idx_a = jnp.clip(a.rpt[rows][:, None] + ia[None, :], 0, a.capacity - 1)
+    valid_a = ia[None, :] < deg_a[:, None]
+    ks = jnp.where(valid_a, a.col[idx_a], 0)                              # (S, DA)
+
+    if rownnz_b is None:
+        rownnz_b = jnp.diff(b.rpt)
+    deg_b = jnp.where(valid_a, rownnz_b[ks], 0)
+    ib = jnp.arange(max_deg_b, dtype=jnp.int32)
+    idx_b = jnp.clip(b.rpt[ks][:, :, None] + ib[None, None, :], 0, b.capacity - 1)
+    valid = valid_a[:, :, None] & (ib[None, None, :] < deg_b[:, :, None])
+    cols = jnp.where(valid, b.col[idx_b], COL_SENTINEL)
+    f = max_deg_a * max_deg_b
+    vals = None
+    if with_values:
+        av = jnp.where(valid_a, a.val[idx_a], 0.0)
+        vals = jnp.where(valid, av[:, :, None] * b.val[idx_b], 0.0).reshape(s, f)
+    return cols.reshape(s, f), vals, valid.reshape(s, f)
+
+
 def pad_row_ids(rows: jax.Array, multiple: int) -> jax.Array:
     """Pad a row-id list to a multiple of ``multiple`` by repeating the LAST
     listed row (padded outputs are sliced off by the caller).

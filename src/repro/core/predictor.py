@@ -26,9 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .csr import CSRDevice, COL_SENTINEL
+from .csr import CSRDevice, COL_SENTINEL, expand_products
 from .flop import flop_per_row
-from .binning import BinningPlan
+from .binning import BinningPlan, ROUTE_SPA
 
 SAMPLE_FRACTION = 0.003
 SAMPLE_CAP = 300
@@ -55,33 +55,44 @@ def draw_sample_rows(key: jax.Array, m: int, sample_num: int) -> jax.Array:
 
 
 def gather_sampled_products(a: CSRDevice, b: CSRDevice, rows: jax.Array,
-                            max_deg_a: int, max_deg_b: int) -> tuple[jax.Array, jax.Array]:
-    """Expand the sampled rows' intermediate-product columns into a static buffer.
+                            max_deg_a: int, max_deg_b: int,
+                            rownnz_b: jax.Array | None = None
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Expand the sampled rows' intermediate-product columns into a static
+    buffer (column-only view of :func:`repro.core.csr.expand_products`).
 
     Returns (cols (S, DA*DB) int32 with COL_SENTINEL padding, valid mask).
     """
-    s = rows.shape[0]
-    deg_a = (a.rpt[rows + 1] - a.rpt[rows]).astype(jnp.int32)           # (S,)
-    ia = jnp.arange(max_deg_a, dtype=jnp.int32)
-    idx_a = a.rpt[rows][:, None] + ia[None, :]                           # (S, DA)
-    valid_a = ia[None, :] < deg_a[:, None]
-    ks = jnp.where(valid_a, a.col[jnp.clip(idx_a, 0, a.capacity - 1)], 0)
-
-    rownnz_b = jnp.diff(b.rpt)
-    deg_b = jnp.where(valid_a, rownnz_b[ks], 0)                          # (S, DA)
-    ib = jnp.arange(max_deg_b, dtype=jnp.int32)
-    idx_b = b.rpt[ks][:, :, None] + ib[None, None, :]                    # (S, DA, DB)
-    valid_b = valid_a[:, :, None] & (ib[None, None, :] < deg_b[:, :, None])
-    cols = jnp.where(valid_b, b.col[jnp.clip(idx_b, 0, b.capacity - 1)], COL_SENTINEL)
-    return cols.reshape(s, max_deg_a * max_deg_b), valid_b.reshape(s, max_deg_a * max_deg_b)
+    cols, _, valid = expand_products(a, b, rows, max_deg_a, max_deg_b,
+                                     rownnz_b=rownnz_b, with_values=False)
+    return cols, valid
 
 
 def count_distinct_sorted(cols: jax.Array) -> jax.Array:
-    """Sort rows and count distinct non-sentinel entries per row."""
+    """Sort rows and count distinct non-sentinel entries per row (ESC)."""
     srt = jnp.sort(cols, axis=-1)
     first = (srt[:, :1] != COL_SENTINEL).astype(jnp.int32)
     ascents = ((srt[:, 1:] != srt[:, :-1]) & (srt[:, 1:] != COL_SENTINEL)).astype(jnp.int32)
     return first[:, 0] + ascents.sum(axis=-1)
+
+
+def count_distinct_dense(cols: jax.Array, ncols_b: int,
+                         span: int = 0) -> jax.Array:
+    """Distinct non-sentinel entries per row via the bitmask-popcount
+    accumulator — the SPA route's jnp path.
+
+    A distinct count is a property of the column *set*, so this equals
+    :func:`count_distinct_sorted` exactly.  ``span`` (the planner's per-row
+    column-extent bound, 0 → full space) sizes the bitmask words; the
+    columns are addressed relative to each row's minimum, so banded/FEM
+    structure touches ``span/32`` word lanes instead of ``ncols_b/32``.
+    (Same algorithm as the Pallas kernel — ``kernels.accumulator`` — which
+    is pure static-shape jnp and therefore runs outside ``pallas_call``
+    too; an XLA scatter would also work here but is element-serial on CPU.)
+    """
+    from repro.kernels.accumulator import bitmask_distinct
+    n = min(int(span), ncols_b) if span else ncols_b
+    return bitmask_distinct(cols, -(-n // 32))
 
 
 @functools.partial(jax.jit, static_argnames=("max_deg_a", "max_deg_b", "use_kernel"))
@@ -120,35 +131,61 @@ def reference_predict(a: CSRDevice, b: CSRDevice, rows: jax.Array,
 # Binned prediction (DESIGN.md §4): per-bucket buffers instead of global pad.
 # --------------------------------------------------------------------------- #
 @functools.partial(jax.jit, static_argnames=("max_deg_a", "max_deg_b"))
-def _bucket_counts(a: CSRDevice, b: CSRDevice, rows: jax.Array,
-                   max_deg_a: int, max_deg_b: int) -> tuple[jax.Array, jax.Array]:
-    """(z, f) for one bucket's sampled rows at the bucket's degree bounds.
+def _bucket_counts(a: CSRDevice, b: CSRDevice, rownnz_b: jax.Array,
+                   rows: jax.Array, max_deg_a: int, max_deg_b: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """(z, f) for one ESC bucket's sampled rows at the bucket's degree bounds.
     jit's static-arg cache keyed on the bucket signature IS the compile cache
     (see core.binning docstring)."""
-    cols, valid = gather_sampled_products(a, b, rows, max_deg_a, max_deg_b)
+    cols, valid = gather_sampled_products(a, b, rows, max_deg_a, max_deg_b,
+                                          rownnz_b=rownnz_b)
     return count_distinct_sorted(cols).sum(), valid.sum()
 
 
-def _binned_counts(a: CSRDevice, b: CSRDevice, rows, plan: BinningPlan,
-                   use_kernel: bool) -> tuple[jax.Array, jax.Array]:
-    """Σ over buckets of the sampled (z*, f*) — exact ints, so the binned
-    totals equal the global-pad totals bit for bit."""
+@functools.partial(jax.jit, static_argnames=("max_deg_a", "max_deg_b",
+                                             "span"))
+def _bucket_counts_spa(a: CSRDevice, b: CSRDevice, rownnz_b: jax.Array,
+                       rows: jax.Array, max_deg_a: int, max_deg_b: int,
+                       span: int = 0) -> tuple[jax.Array, jax.Array]:
+    """SPA-route twin of :func:`_bucket_counts`: dense presence instead of
+    sort.  ``b.ncols`` is static (CSRDevice.shape is aux data)."""
+    cols, valid = gather_sampled_products(a, b, rows, max_deg_a, max_deg_b,
+                                          rownnz_b=rownnz_b)
+    return count_distinct_dense(cols, b.ncols, span).sum(), valid.sum()
+
+
+def binned_symbolic_counts(a: CSRDevice, b: CSRDevice, rows,
+                           plan: BinningPlan, use_kernel: bool = False
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Σ over buckets of the sampled (z*, f*), each bucket on its planned
+    accumulator route — exact ints, so the totals equal the global-pad /
+    all-ESC totals bit for bit whatever the per-bucket routing."""
     z = jnp.int32(0)
     f = jnp.int32(0)
+    rownnz_b = jnp.diff(b.rpt)           # hoisted out of the per-bucket calls
     for bucket, sub in zip(plan.buckets, plan.subset(np.asarray(rows))):
         if sub.size == 0:
             continue            # no sampled rows landed in this bucket
         sub_d = jnp.asarray(sub)
         if use_kernel:
             from repro.kernels import ops as kops
-            zb, fb, _ = kops.fused_flop_symbolic(
-                a, b, sub_d, bucket.deg_a, bucket.deg_b,
-                block_samples=min(bucket.block_rows, 8))
+            zb, fb, _ = kops.fused_flop_symbolic_routed(
+                a, b, sub_d, max_deg_a=bucket.deg_a, max_deg_b=bucket.deg_b,
+                route=bucket.route, span=bucket.span,
+                block_samples=min(bucket.block_rows, 8), rownnz_b=rownnz_b)
+        elif bucket.route == ROUTE_SPA:
+            zb, fb = _bucket_counts_spa(a, b, rownnz_b, sub_d,
+                                        bucket.deg_a, bucket.deg_b,
+                                        bucket.span)
         else:
-            zb, fb = _bucket_counts(a, b, sub_d, bucket.deg_a, bucket.deg_b)
+            zb, fb = _bucket_counts(a, b, rownnz_b, sub_d,
+                                    bucket.deg_a, bucket.deg_b)
         z = z + zb.astype(jnp.int32)
         f = f + fb.astype(jnp.int32)
     return z, f
+
+
+_binned_counts = binned_symbolic_counts      # backwards-compatible alias
 
 
 def _binned_floprc(a: CSRDevice, b: CSRDevice, plan: BinningPlan) -> jax.Array:

@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .csr import CSRDevice, COL_SENTINEL, pad_row_ids
+from .csr import CSRDevice, COL_SENTINEL, expand_products, pad_row_ids
+from .binning import ROUTE_SPA
 
 
 class SpGEMMOut(NamedTuple):
@@ -33,25 +34,12 @@ class SpGEMMOut(NamedTuple):
 
 
 def gather_products(a: CSRDevice, b: CSRDevice, rows: jax.Array,
-                    max_deg_a: int, max_deg_b: int):
-    """Columns AND value-products of all intermediate products of ``rows``."""
-    deg_a = (a.rpt[rows + 1] - a.rpt[rows]).astype(jnp.int32)
-    ia = jnp.arange(max_deg_a, dtype=jnp.int32)
-    idx_a = jnp.clip(a.rpt[rows][:, None] + ia[None, :], 0, a.capacity - 1)
-    valid_a = ia[None, :] < deg_a[:, None]
-    ks = jnp.where(valid_a, a.col[idx_a], 0)
-    av = jnp.where(valid_a, a.val[idx_a], 0.0)
-
-    rownnz_b = jnp.diff(b.rpt)
-    deg_b = jnp.where(valid_a, rownnz_b[ks], 0)
-    ib = jnp.arange(max_deg_b, dtype=jnp.int32)
-    idx_b = jnp.clip(b.rpt[ks][:, :, None] + ib[None, None, :], 0, b.capacity - 1)
-    valid = valid_a[:, :, None] & (ib[None, None, :] < deg_b[:, :, None])
-    cols = jnp.where(valid, b.col[idx_b], COL_SENTINEL)
-    vals = jnp.where(valid, av[:, :, None] * b.val[idx_b], 0.0)
-    s = rows.shape[0]
-    f = max_deg_a * max_deg_b
-    return cols.reshape(s, f), vals.reshape(s, f), valid.reshape(s, f)
+                    max_deg_a: int, max_deg_b: int,
+                    rownnz_b: jax.Array | None = None):
+    """Columns AND value-products of all intermediate products of ``rows``
+    (value-carrying view of :func:`repro.core.csr.expand_products`)."""
+    return expand_products(a, b, rows, max_deg_a, max_deg_b,
+                           rownnz_b=rownnz_b, with_values=True)
 
 
 def _accumulate_block(cols, vals, row_capacity: int):
@@ -77,30 +65,121 @@ def _accumulate_block(cols, vals, row_capacity: int):
     return out_col, out_val, row_nnz, overflow
 
 
+def _dense_accumulate_block(cols, vals, ncols_b: int, row_capacity: int,
+                            span: int = 0):
+    """Dense-SPA accumulation for one block of rows (jnp path, DESIGN §5).
+
+    Value products scatter-add into a dense accumulator; structural presence
+    is tracked separately (a run summing to 0.0 is still an output entry,
+    exactly as on the sort path), then both compact into the predicted
+    ``row_capacity`` slots in ascending-column order — the same layout the
+    sort path emits.  Sentinel-padded slots scatter out of range and are
+    dropped.  With ``span`` (the planner's per-row column-extent bound) the
+    accumulator covers only the pow2-padded extent, addressed relative to
+    each row's minimum column — the banded/FEM lever of the SPA route.
+    """
+    from .binning import ceil_pow2
+    bs = cols.shape[0]
+    lo = None
+    n = min(int(span), ncols_b) if span else ncols_b
+    if span:
+        from repro.kernels.accumulator import extent_relative
+        cols, lo = extent_relative(cols)
+        n = ceil_pow2(n)
+    rows_ix = jnp.broadcast_to(jnp.arange(bs)[:, None], cols.shape)
+    acc = jnp.zeros((bs, n), jnp.float32).at[rows_ix, cols].add(
+        vals, mode="drop")
+    present = jnp.zeros((bs, n), jnp.bool_).at[rows_ix, cols].set(
+        True, mode="drop")
+    return compact_dense(acc, present, row_capacity, col_offset=lo)
+
+
+def compact_dense(acc, present, row_capacity: int, col_offset=None):
+    """Dense accumulator (+ presence mask) → predicted-capacity buffers.
+
+    Shared by the jnp SPA path and the Pallas SPA kernel wrapper: ascending
+    columns, ``row_nnz`` = structural count (may exceed capacity), overflow
+    slots dropped — bit-identical structure to the ESC compaction.
+    ``col_offset`` (per-row int32) restores absolute column ids when the
+    accumulator was addressed relative to each row's minimum column (the
+    extent-relative layout of ``kernels.accumulator.spa_numeric_pallas``).
+    """
+    bs, n = acc.shape
+    pres_i = present.astype(jnp.int32)
+    seg = jnp.cumsum(pres_i, axis=-1) - 1
+    seg_sc = jnp.where(present, seg, row_capacity)
+    rows_ix = jnp.broadcast_to(jnp.arange(bs)[:, None], acc.shape)
+    out_val = jnp.zeros((bs, row_capacity), jnp.float32).at[
+        rows_ix, seg_sc].add(acc, mode="drop")
+    col_ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :],
+                               acc.shape)
+    if col_offset is not None:
+        col_ids = col_ids + col_offset[:, None].astype(jnp.int32)
+    out_col = jnp.full((bs, row_capacity), COL_SENTINEL, jnp.int32).at[
+        rows_ix, seg_sc].min(col_ids, mode="drop")
+    row_nnz = seg[:, -1] + 1
+    overflow = jnp.maximum(row_nnz - row_capacity, 0).sum()
+    return out_col, out_val, row_nnz, overflow
+
+
+def _blocked_rows(a: CSRDevice, b: CSRDevice, rows: jax.Array, body,
+                  block_rows: int, row_capacity: int) -> SpGEMMOut:
+    """Shared block/pad/slice scaffolding of the jnp numeric executors.
+
+    Overflow is derived from the REAL rows' true nnz after slicing off the
+    block padding — no closed-form correction inferred from the pad fill.
+    (The previous correction assumed every pad row duplicates the *last*
+    listed row; that holds for today's ``pad_row_ids`` but silently
+    miscounts under any other fill contract — see its regression test.)
+    """
+    r = rows.shape[0]
+    nblocks = -(-r // block_rows)
+    pad_r = nblocks * block_rows
+    row_ids = pad_row_ids(rows, block_rows).reshape(nblocks, block_rows)
+    out_col, out_val, row_nnz, _ = jax.lax.map(body, row_ids)
+    out_col = out_col.reshape(pad_r, row_capacity)[:r]
+    out_val = out_val.reshape(pad_r, row_capacity)[:r]
+    row_nnz = row_nnz.reshape(pad_r)[:r]
+    overflow = jnp.maximum(row_nnz - row_capacity, 0).sum().astype(jnp.int32)
+    return SpGEMMOut(out_col, out_val, row_nnz, overflow)
+
+
 @functools.partial(jax.jit, static_argnames=("row_capacity", "max_deg_a",
                                              "max_deg_b", "block_rows"))
 def spgemm_rows(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
                 row_capacity: int, max_deg_a: int, max_deg_b: int,
                 block_rows: int = 256) -> SpGEMMOut:
-    """Numeric phase for an explicit row-id list (one degree bucket, or all
-    rows).  Output row ``i`` corresponds to ``rows[i]``."""
-    r = rows.shape[0]
-    nblocks = -(-r // block_rows)
-    pad_r = nblocks * block_rows
-    row_ids = pad_row_ids(rows, block_rows).reshape(nblocks, block_rows)
+    """Numeric phase (ESC/sort route) for an explicit row-id list (one degree
+    bucket, or all rows).  Output row ``i`` corresponds to ``rows[i]``."""
+    rownnz_b = jnp.diff(b.rpt)
 
     def body(block):
-        cols, vals, _ = gather_products(a, b, block, max_deg_a, max_deg_b)
+        cols, vals, _ = gather_products(a, b, block, max_deg_a, max_deg_b,
+                                        rownnz_b=rownnz_b)
         return _accumulate_block(cols, vals, row_capacity)
 
-    out_col, out_val, row_nnz, overflow = jax.lax.map(body, row_ids)
-    out_col = out_col.reshape(pad_r, row_capacity)[:r]
-    out_val = out_val.reshape(pad_r, row_capacity)[:r]
-    row_nnz = row_nnz.reshape(pad_r)[:r]
-    # padded duplicate rows were counted in the per-block overflow sums
-    pad_over = jnp.maximum(row_nnz[-1:] - row_capacity, 0) * (pad_r - r)
-    return SpGEMMOut(out_col, out_val, row_nnz,
-                     overflow.sum() - pad_over.sum())
+    return _blocked_rows(a, b, rows, body, block_rows, row_capacity)
+
+
+@functools.partial(jax.jit, static_argnames=("row_capacity", "max_deg_a",
+                                             "max_deg_b", "block_rows",
+                                             "span"))
+def spgemm_rows_spa(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
+                    row_capacity: int, max_deg_a: int, max_deg_b: int,
+                    block_rows: int = 256, span: int = 0) -> SpGEMMOut:
+    """Numeric phase, dense-SPA route: same contract as :func:`spgemm_rows`
+    (identical ``col``/``row_nnz``/``overflow``; ``val`` to float tolerance —
+    the accumulation order differs).  ``span`` is the planner's bound on the
+    rows' product-column extent (0 → full column space)."""
+    rownnz_b = jnp.diff(b.rpt)
+
+    def body(block):
+        cols, vals, _ = gather_products(a, b, block, max_deg_a, max_deg_b,
+                                        rownnz_b=rownnz_b)
+        return _dense_accumulate_block(cols, vals, b.ncols, row_capacity,
+                                       span)
+
+    return _blocked_rows(a, b, rows, body, block_rows, row_capacity)
 
 
 def spgemm(a: CSRDevice, b: CSRDevice, *, row_capacity: int,
@@ -117,11 +196,13 @@ def spgemm_binned(a: CSRDevice, b: CSRDevice, plan, *,
     """C = A·B numeric phase, bucket-iterated (DESIGN.md §4).
 
     ``plan`` is a ``core.binning.BinningPlan``; ``alloc`` is either an int
-    (uniform row capacity — output bitwise-equal to :func:`spgemm`) or a
-    ``predictor.BinnedAllocationPlan`` (per-bucket capacities — smaller
-    buffers, same values wherever neither path overflows).  With
-    ``use_kernel`` each bucket routes through the Pallas numeric kernel
-    (``kernels.spgemm_numeric``) at the bucket's degree bounds.
+    (uniform row capacity — output bitwise-equal to :func:`spgemm` wherever
+    every bucket runs the ESC route) or a ``predictor.BinnedAllocationPlan``
+    (per-bucket capacities — smaller buffers, same values wherever neither
+    path overflows).  Each bucket runs its planned accumulator route — ESC
+    (sort) or dense-SPA — with identical ``col``/``row_nnz``/``overflow``
+    and ``val`` to float tolerance (DESIGN.md §5).  With ``use_kernel`` the
+    per-bucket pass is the routed Pallas dispatch in ``kernels.ops``.
     """
     if isinstance(alloc, (int, np.integer)):
         caps = [int(alloc)] * len(plan.buckets)
@@ -141,9 +222,16 @@ def spgemm_binned(a: CSRDevice, b: CSRDevice, plan, *,
         rows_d = jnp.asarray(bucket.rows)
         if use_kernel:
             from repro.kernels import ops as kops
-            c, v, n, of = kops.spgemm_numeric(
+            c, v, n, of = kops.spgemm_numeric_routed(
                 a, b, rows_d, max_deg_a=bucket.deg_a, max_deg_b=bucket.deg_b,
-                row_capacity=cap, block_rows=bucket.block_rows)
+                row_capacity=cap, block_rows=bucket.block_rows,
+                route=bucket.route, tile_n=bucket.tile_n,
+                n_tiles=bucket.n_tiles)
+        elif bucket.route == ROUTE_SPA:
+            c, v, n, of = spgemm_rows_spa(
+                a, b, rows_d, row_capacity=cap, max_deg_a=bucket.deg_a,
+                max_deg_b=bucket.deg_b, block_rows=bucket.block_rows,
+                span=bucket.span)
         else:
             c, v, n, of = spgemm_rows(
                 a, b, rows_d, row_capacity=cap, max_deg_a=bucket.deg_a,

@@ -11,9 +11,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.csr import CSRDevice
+from repro.core.binning import ROUTE_ESC, ROUTE_SPA
 from . import flop_per_row as _flop_k
 from . import spgemm_symbolic as _sym_k
 from . import spgemm_numeric as _num_k
+from . import accumulator as _acc_k
 from . import flash_attention as _fa_k
 
 
@@ -59,6 +61,39 @@ def fused_flop_symbolic(a: CSRDevice, b: CSRDevice, rows: jax.Array,
         interpret=_interpret())
 
 
+def bitmask_symbolic(a: CSRDevice, b: CSRDevice, rows: jax.Array,
+                     max_deg_a: int, max_deg_b: int,
+                     block_samples: int = 8, span: int = 0,
+                     rownnz_b=None) -> tuple[jax.Array, jax.Array]:
+    """(z*, f*) via the bitmask-popcount kernel (SPA symbolic route) —
+    bit-equal to :func:`sampled_symbolic`.  ``span`` is the planner's bound
+    on per-row product-column extent (0 → full column space)."""
+    return _acc_k.bitmask_symbolic_pallas(
+        a.rpt, a.col, b.rpt, b.col, rows, max_deg_a=max_deg_a,
+        max_deg_b=max_deg_b, ncols_b=b.ncols, span=span,
+        block_samples=block_samples, interpret=_interpret(),
+        rownnz_b=rownnz_b)
+
+
+def fused_flop_symbolic_routed(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
+                               max_deg_a: int, max_deg_b: int,
+                               route: str = ROUTE_ESC, span: int = 0,
+                               block_samples: int = 8, rownnz_b=None):
+    """Route-dispatched fused (z*, f*, flop) — the binned predictor's single
+    per-bucket Pallas invocation.  The route is static plan metadata
+    (``RowBucket.route``), so dispatch costs nothing at runtime."""
+    if route == ROUTE_SPA:
+        return _acc_k.fused_flop_symbolic_bitmask_pallas(
+            a.rpt, a.col, b.rpt, b.col, rows, max_deg_a=max_deg_a,
+            max_deg_b=max_deg_b, ncols_b=b.ncols, span=span,
+            block_samples=block_samples, interpret=_interpret(),
+            rownnz_b=rownnz_b)
+    return _sym_k.fused_flop_symbolic_pallas(
+        a.rpt, a.col, b.rpt, b.col, rows, max_deg_a=max_deg_a,
+        max_deg_b=max_deg_b, block_samples=block_samples,
+        interpret=_interpret())
+
+
 def spgemm_numeric(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
                    max_deg_a: int, max_deg_b: int, row_capacity: int,
                    block_rows: int = 8):
@@ -68,6 +103,42 @@ def spgemm_numeric(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
         max_deg_a=max_deg_a, max_deg_b=max_deg_b, block_rows=block_rows,
         interpret=_interpret())
     return _num_k.compact(cols, vals, first, row_capacity)
+
+
+def spgemm_numeric_spa(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
+                       max_deg_a: int, max_deg_b: int, row_capacity: int,
+                       tile_n: int, n_tiles: int = 0, block_rows: int = 8,
+                       rownnz_b=None):
+    """Dense-SPA kernel numeric phase + XLA compaction — same output
+    contract as :func:`spgemm_numeric` (col/row_nnz/overflow identical,
+    values to float tolerance).  ``n_tiles·tile_n`` must bound every row's
+    product-column extent; the default covers the full column space."""
+    from repro.core.spgemm import compact_dense
+    if tile_n <= 0:
+        from repro.core.binning import spa_tile, DEFAULT_LANE_BUDGET
+        tile_n, n_tiles = spa_tile(b.ncols, DEFAULT_LANE_BUDGET)
+    acc, pres, lo = _acc_k.spa_numeric_pallas(
+        a.rpt, a.col, a.val, b.rpt, b.col, b.val, rows,
+        max_deg_a=max_deg_a, max_deg_b=max_deg_b, ncols_b=b.ncols,
+        tile_n=tile_n, n_tiles=n_tiles, block_rows=block_rows,
+        interpret=_interpret(), rownnz_b=rownnz_b)
+    return compact_dense(acc, pres.astype(bool), row_capacity, col_offset=lo)
+
+
+def spgemm_numeric_routed(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
+                          max_deg_a: int, max_deg_b: int, row_capacity: int,
+                          block_rows: int = 8, route: str = ROUTE_ESC,
+                          tile_n: int = 0, n_tiles: int = 0, rownnz_b=None):
+    """Route-dispatched numeric phase — ``spgemm_binned``'s per-bucket
+    kernel entry point."""
+    if route == ROUTE_SPA:
+        return spgemm_numeric_spa(
+            a, b, rows, max_deg_a=max_deg_a, max_deg_b=max_deg_b,
+            row_capacity=row_capacity, tile_n=tile_n, n_tiles=n_tiles,
+            block_rows=block_rows, rownnz_b=rownnz_b)
+    return spgemm_numeric(a, b, rows, max_deg_a=max_deg_a,
+                          max_deg_b=max_deg_b, row_capacity=row_capacity,
+                          block_rows=block_rows)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,

@@ -55,6 +55,28 @@ def spgemm_numeric_ref(a: CSRDevice, b: CSRDevice, rows, max_deg_a, max_deg_b,
     return spgemm_mod._accumulate_block(cols, vals, row_capacity)
 
 
+def bitmask_symbolic_ref(a: CSRDevice, b: CSRDevice, rows, max_deg_a,
+                         max_deg_b):
+    """Oracle for kernels.bitmask_symbolic: dense-presence distinct count.
+
+    Counts are a property of the column *set*, so this equals
+    ``sampled_symbolic_ref`` bit for bit — the SPA-vs-ESC symbolic
+    equivalence contract (DESIGN.md §5)."""
+    cols, valid = pred_mod.gather_sampled_products(a, b, rows, max_deg_a,
+                                                   max_deg_b)
+    z = pred_mod.count_distinct_dense(cols, b.ncols).sum()
+    return z, valid.sum()
+
+
+def spa_numeric_ref(a: CSRDevice, b: CSRDevice, rows, max_deg_a, max_deg_b,
+                    row_capacity):
+    """Oracle for kernels.spgemm_numeric_spa: dense scatter-add + compact."""
+    cols, vals, _ = spgemm_mod.gather_products(a, b, rows, max_deg_a,
+                                               max_deg_b)
+    return spgemm_mod._dense_accumulate_block(cols, vals, b.ncols,
+                                              row_capacity)
+
+
 def attention_ref(q, k, v, *, causal: bool = True):
     """Oracle for kernels.flash_attention: dense softmax attention, fp32."""
     b, hq, sq, d = q.shape

@@ -1,0 +1,263 @@
+"""Hybrid accumulator backend: bitmask/dense-SPA vs sort/ESC routes.
+
+The equivalence contract (DESIGN.md §5): symbolic ``z*``/``f*`` are
+bitwise-equal across routes (distinct counts are order-invariant); numeric
+``col``/``row_nnz``/``overflow`` are identical with ``val`` to float
+tolerance (accumulation order differs).  Routing is a plan-time decision:
+auto plans must never put a bucket on SPA when its dense column tile would
+bust the VMEM lane budget.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal CI image — deterministic tests must still run
+    from hypothesis_shim import given, settings, st
+
+from repro.sparse import random as sprand
+from repro.core import binning, csr, predictor, spgemm
+from repro.core.flop import flop_per_row
+from repro.kernels import ops, ref
+
+
+def _families():
+    """One small matrix pair per suite family (er/pl/rmat/band/fem)."""
+    return [
+        ("er", sprand.erdos_renyi(400, 400, 4, seed=31),
+         sprand.erdos_renyi(400, 400, 3, seed=32)),
+        ("pl", sprand.power_law(500, 500, 5, 1.5, seed=33),
+         sprand.power_law(500, 500, 4, 1.6, seed=34)),
+        ("rmat", sprand.rmat(400, 400, 2400, seed=35),
+         sprand.rmat(400, 400, 2000, seed=36)),
+        ("band", sprand.banded(500, 500, 10, 14, seed=37),
+         sprand.banded(500, 500, 8, 12, seed=38)),
+        ("fem", sprand.banded(300, 300, 24, 16, seed=39),
+         sprand.banded(300, 300, 20, 14, seed=40)),
+    ]
+
+
+_IDS = [f[0] for f in _families()]
+
+
+# --------------------------------------------------------------------------- #
+# symbolic: dense/bitmask distinct == sorted distinct (bitwise)
+# --------------------------------------------------------------------------- #
+def test_count_distinct_dense_equals_sorted():
+    for _, a, b in _families():
+        ad, bd = csr.to_device(a), csr.to_device(b)
+        mda, mdb = int(a.row_nnz.max()), int(b.row_nnz.max())
+        rows = predictor.draw_sample_rows(jax.random.PRNGKey(0), a.nrows, 50)
+        cols, _ = predictor.gather_sampled_products(ad, bd, rows, mda, mdb)
+        np.testing.assert_array_equal(
+            np.asarray(predictor.count_distinct_sorted(cols)),
+            np.asarray(predictor.count_distinct_dense(cols, b.ncols)))
+
+
+@pytest.mark.parametrize("samples,block", [(8, 8), (37, 8), (5, 16)])
+def test_bitmask_kernel_sweep(samples, block):
+    a = sprand.banded(200, 200, 8, 12, seed=3)
+    b = sprand.erdos_renyi(200, 160, 5, seed=4)
+    ad, bd = csr.to_device(a), csr.to_device(b)
+    mda, mdb = int(a.row_nnz.max()), int(b.row_nnz.max())
+    rows = predictor.draw_sample_rows(jax.random.PRNGKey(samples), 200, samples)
+    zk, fk = ops.bitmask_symbolic(ad, bd, rows, mda, mdb, block_samples=block)
+    zr, fr = ref.bitmask_symbolic_ref(ad, bd, rows, mda, mdb)
+    zs, fs = ref.sampled_symbolic_ref(ad, bd, rows, mda, mdb)
+    assert int(zk) == int(zr) == int(zs)
+    assert int(fk) == int(fr) == int(fs)
+
+
+def test_fused_bitmask_matches_fused_sort():
+    _, a, b = _families()[3]
+    ad, bd = csr.to_device(a), csr.to_device(b)
+    mda, mdb = int(a.row_nnz.max()), int(b.row_nnz.max())
+    rows = predictor.draw_sample_rows(jax.random.PRNGKey(7), a.nrows, 21)
+    ze, fe, fle = ops.fused_flop_symbolic(ad, bd, rows, mda, mdb)
+    zs, fs, fls = ops.fused_flop_symbolic_routed(
+        ad, bd, rows, max_deg_a=mda, max_deg_b=mdb, route=binning.ROUTE_SPA)
+    assert int(ze) == int(zs) and int(fe) == int(fs)
+    np.testing.assert_array_equal(np.asarray(fle), np.asarray(fls))
+
+
+# --------------------------------------------------------------------------- #
+# numeric: dense-SPA kernel / jnp path == ESC (col/nnz/overflow exact)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("cap,tile", [(4, 64), (16, 64), (16, 256), (64, 128)])
+def test_spa_numeric_kernel_sweep(cap, tile):
+    """Includes tiled runs (tile < next_pow2(ncols)) and overflow caps."""
+    a = sprand.banded(150, 150, 12, 6, seed=9)   # heavy collisions
+    ad = csr.to_device(a)
+    mda = int(a.row_nnz.max())
+    rows = jnp.arange(150, dtype=jnp.int32)
+    ck, vk, nk, ofk = ops.spgemm_numeric_spa(
+        ad, ad, rows, max_deg_a=mda, max_deg_b=mda, row_capacity=cap,
+        tile_n=tile, block_rows=8)
+    cr_, vr_, nr_, ofr = ref.spgemm_numeric_ref(ad, ad, rows, mda, mda, cap)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr_))
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr_), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(nr_))
+    assert int(ofk) == int(ofr)
+
+
+def test_spa_jnp_path_matches_esc():
+    for _, a, b in _families()[:3]:
+        ad, bd = csr.to_device(a), csr.to_device(b)
+        mda, mdb = int(a.row_nnz.max()), int(b.row_nnz.max())
+        rows = jnp.asarray(np.arange(0, a.nrows, 3, dtype=np.int32))
+        oe = spgemm.spgemm_rows(ad, bd, rows, row_capacity=16, max_deg_a=mda,
+                                max_deg_b=mdb, block_rows=32)
+        os_ = spgemm.spgemm_rows_spa(ad, bd, rows, row_capacity=16,
+                                     max_deg_a=mda, max_deg_b=mdb,
+                                     block_rows=32)
+        np.testing.assert_array_equal(np.asarray(oe.col), np.asarray(os_.col))
+        np.testing.assert_allclose(np.asarray(oe.val), np.asarray(os_.val),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(oe.row_nnz),
+                                      np.asarray(os_.row_nnz))
+        assert int(oe.overflow) == int(os_.overflow)
+
+
+# --------------------------------------------------------------------------- #
+# routing: forced esc/spa agree on every suite family (satellite contract)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name,a,b", _families(), ids=_IDS)
+def test_forced_routes_agree_symbolic(name, a, b):
+    ad, bd = csr.to_device(a), csr.to_device(b)
+    rows = predictor.draw_sample_rows(jax.random.PRNGKey(1), a.nrows, 40)
+    preds = {}
+    for route in ("esc", "spa", "auto"):
+        plan = binning.build_plan(a, b, route=route)
+        preds[route] = predictor.proposed_predict_binned(ad, bd, rows, plan)
+    for route in ("spa", "auto"):
+        assert int(preds["esc"].sampled_nnz) == int(preds[route].sampled_nnz)
+        assert int(preds["esc"].sampled_flop) == int(preds[route].sampled_flop)
+        assert float(preds["esc"].nnz_total) == float(preds[route].nnz_total)
+        np.testing.assert_array_equal(np.asarray(preds["esc"].structure),
+                                      np.asarray(preds[route].structure))
+
+
+@pytest.mark.parametrize("name,a,b", _families(), ids=_IDS)
+def test_forced_routes_agree_numeric(name, a, b):
+    ad, bd = csr.to_device(a), csr.to_device(b)
+    floprc, _ = flop_per_row(ad, bd)
+    rows = predictor.draw_sample_rows(jax.random.PRNGKey(2), a.nrows, 40)
+    plan_e = binning.build_plan(a, b, route="esc")
+    pred = predictor.proposed_predict_binned(ad, bd, rows, plan_e)
+    alloc = predictor.AllocationPlan.from_prediction(
+        np.asarray(pred.structure), np.asarray(floprc), safety=1.3)
+    outs = {route: spgemm.spgemm_binned(
+                ad, bd, binning.build_plan(a, b, route=route),
+                alloc=alloc.row_capacity)
+            for route in ("esc", "spa", "auto")}
+    for route in ("spa", "auto"):
+        np.testing.assert_array_equal(np.asarray(outs["esc"].col),
+                                      np.asarray(outs[route].col))
+        np.testing.assert_allclose(np.asarray(outs["esc"].val),
+                                   np.asarray(outs[route].val),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(outs["esc"].row_nnz),
+                                      np.asarray(outs[route].row_nnz))
+        assert int(outs["esc"].overflow) == int(outs[route].overflow)
+
+
+def test_forced_routes_agree_kernel_path():
+    """Kernel (Pallas) dispatch: routed numeric + symbolic agree too."""
+    _, a, b = _families()[3]
+    ad, bd = csr.to_device(a), csr.to_device(b)
+    rows = predictor.draw_sample_rows(jax.random.PRNGKey(4), a.nrows, 24)
+    plans = {r: binning.build_plan(a, b, route=r) for r in ("esc", "spa")}
+    pe = predictor.proposed_predict_binned(ad, bd, rows, plans["esc"],
+                                           use_kernel=True)
+    ps = predictor.proposed_predict_binned(ad, bd, rows, plans["spa"],
+                                           use_kernel=True)
+    assert int(pe.sampled_nnz) == int(ps.sampled_nnz)
+    oe = spgemm.spgemm_binned(ad, bd, plans["esc"], alloc=24, use_kernel=True)
+    os_ = spgemm.spgemm_binned(ad, bd, plans["spa"], alloc=24, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(oe.col), np.asarray(os_.col))
+    np.testing.assert_allclose(np.asarray(oe.val), np.asarray(os_.val),
+                               rtol=1e-5, atol=1e-5)
+    assert int(oe.overflow) == int(os_.overflow)
+
+
+# --------------------------------------------------------------------------- #
+# routing: the VMEM-budget property + cost-model direction
+# --------------------------------------------------------------------------- #
+@given(st.integers(0, 10_000), st.integers(8, 4096), st.integers(10, 18))
+@settings(max_examples=25, deadline=None)
+def test_auto_plan_spa_fits_lane_budget(seed, ncols, budget_exp):
+    """build_plan(route="auto") must never pick SPA when the dense column
+    tile would exceed the VMEM lane budget: every SPA bucket satisfies
+    block_rows·tile_n ≤ budget, covers the column space in ONE tile, and
+    keeps ≥ spa_min_block_rows rows per block."""
+    budget = 1 << budget_exp
+    rng = np.random.default_rng(seed)
+    a = sprand.erdos_renyi(64, ncols, int(rng.integers(1, 9)), seed=seed)
+    b = sprand.erdos_renyi(ncols, ncols, int(rng.integers(1, 9)),
+                           seed=seed + 1)
+    plan = binning.build_plan(a, b, lane_budget=budget)
+    for bk in plan.buckets:
+        if bk.route == binning.ROUTE_SPA:
+            assert bk.n_tiles == 1
+            assert bk.tile_n >= binning.ceil_pow2(ncols) or \
+                bk.tile_n * bk.n_tiles >= ncols
+            assert bk.block_rows * bk.tile_n <= budget
+            assert budget // bk.tile_n >= binning.DEFAULT_SPA_MIN_BLOCK_ROWS
+        else:
+            assert bk.tile_n == 0 and bk.n_tiles == 0
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_forced_spa_tiles_cover_columns(seed):
+    """Forced SPA always tiles instead of being rejected — tiles cover the
+    pow2-padded column space and each tile block fits the budget."""
+    rng = np.random.default_rng(seed)
+    ncols = int(rng.integers(8, 3000))
+    budget = 1 << int(rng.integers(8, 16))
+    a = sprand.erdos_renyi(48, ncols, 3, seed=seed)
+    b = sprand.erdos_renyi(ncols, ncols, 3, seed=seed + 1)
+    plan = binning.build_plan(a, b, route="spa", lane_budget=budget)
+    for bk in plan.buckets:
+        assert bk.route == binning.ROUTE_SPA
+        assert bk.tile_n * bk.n_tiles >= ncols
+        assert bk.tile_n % binning.SPA_MIN_TILE == 0 or \
+            bk.tile_n == binning.ceil_pow2(ncols)
+        assert bk.block_rows * bk.tile_n <= max(budget, bk.tile_n)
+
+
+def test_cost_model_routes_expected_regimes():
+    """The regimes the router exists to separate (DESIGN.md §5): banded/FEM
+    (wide buffers, compact columns) → SPA; low-degree ER and wide power-law
+    column spaces → ESC."""
+    # banded 2000-col: w≈150, sort pays ~64 stages/lane → SPA
+    band = sprand.banded(2000, 2000, 12, 16, seed=13)
+    assert binning.build_plan(band, band).route_rows()["esc"] == 0
+    # power-law 3000-col: tile would leave <64 rows/block → all ESC
+    pl = sprand.power_law(3000, 3000, 5, 1.5, seed=11)
+    plb = sprand.power_law(3000, 3000, 4, 1.6, seed=12)
+    assert binning.build_plan(pl, plb).route_rows()["spa"] == 0
+    # tiny-width buckets: sorting a 4-lane buffer beats touching even a
+    # narrow 128-lane tile — ESC; mid-width with narrow extent flips to SPA;
+    # the same mid-width against a full-span extent stays ESC
+    assert binning.choose_route(2, 2, 2000, 64)[0] == binning.ROUTE_ESC
+    assert binning.choose_route(12, 12, 2000, 64)[0] == binning.ROUTE_SPA
+    assert binning.choose_route(12, 12, 2000)[0] == binning.ROUTE_ESC
+    # low-degree ER on a wide B keeps its narrow buckets on ESC
+    er = sprand.erdos_renyi(2000, 2000, 3, seed=25)
+    plan = binning.build_plan(er, er)
+    narrow = [bk for bk in plan.buckets if bk.width <= 16]
+    assert narrow and all(bk.route == binning.ROUTE_ESC for bk in narrow)
+
+
+def test_signature_includes_route():
+    """Route and tile are compile-cache keys: forced esc/spa plans of the
+    same matrix must NOT share signatures (different programs)."""
+    _, a, b = _families()[3]
+    pe = binning.build_plan(a, b, route="esc")
+    ps = binning.build_plan(a, b, route="spa")
+    assert set(pe.signatures()).isdisjoint(ps.signatures())
+    assert all(len(s) == 6 for s in pe.signatures())

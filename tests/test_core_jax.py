@@ -91,6 +91,59 @@ def test_spgemm_overflow_reported():
     assert int(out.overflow) > 0
 
 
+def test_pad_row_ids_fill_contract():
+    """The documented contract: pad slots repeat the LAST listed row."""
+    rows = jnp.asarray([7, 3, 9], jnp.int32)
+    padded = np.asarray(csr.pad_row_ids(rows, 4))
+    np.testing.assert_array_equal(padded, [7, 3, 9, 9])
+    np.testing.assert_array_equal(np.asarray(csr.pad_row_ids(rows, 3)),
+                                  [7, 3, 9])
+
+
+def test_spgemm_rows_overflow_independent_of_pad_fill(monkeypatch):
+    """Regression (PR 2): overflow must not be inferred from an assumed pad
+    fill contract.  The retired closed-form subtracted
+    ``max(nnz[last]-cap, 0)·n_pads`` — correct only while every pad row
+    duplicates the LAST listed row.  Under any other fill (here: first-row
+    fill, with an overflowing first row) that formula miscounts; the
+    slice-then-sum derivation stays exact."""
+    a = sprand.banded(64, 64, 12, 6, seed=9)
+    ad = csr.to_device(a)
+    mda = int(a.row_nnz.max())
+    nnz = np.asarray(spgemm.spgemm(ad, ad, row_capacity=64, max_deg_a=mda,
+                                   max_deg_b=mda, block_rows=16).row_nnz)
+    heavy, light = int(nnz.argmax()), int(nnz.argmin())
+    cap = int((nnz[heavy] + nnz[light]) // 2)
+    assert nnz[heavy] > cap >= nnz[light]          # only `heavy` overflows
+    rows = jnp.asarray([heavy, light], jnp.int32)
+
+    def run(block_rows):
+        return int(spgemm.spgemm_rows(
+            ad, ad, rows, row_capacity=cap, max_deg_a=mda, max_deg_b=mda,
+            block_rows=block_rows).overflow)
+
+    want = run(1)                                  # block_rows=1: never pads
+    assert want == int(nnz[heavy]) - cap
+    assert run(5) == want                          # 3 pads, repeat-last fill
+
+    def pad_first(rows_, multiple):                # adversarial fill contract
+        r = rows_.shape[0]
+        pad_r = (-(-r // multiple)) * multiple
+        rows_ = rows_.astype(jnp.int32)
+        if pad_r == r:
+            return rows_
+        return jnp.concatenate(
+            [rows_, jnp.broadcast_to(rows_[:1], (pad_r - r,))])
+
+    monkeypatch.setattr(spgemm, "pad_row_ids", pad_first)
+    n_pads = 5                                     # block_rows=7, 2 real rows
+    assert run(7) == want
+    # the retired formula would have added the pads' overflow (they now
+    # duplicate the overflowing FIRST row) and subtracted nothing:
+    old_formula = (1 + n_pads) * want - max(int(nnz[light]) - cap, 0) * n_pads
+    assert old_formula != want
+
+
 def test_partition_balance():
     rng = np.random.default_rng(0)
     w = rng.pareto(1.5, size=1000) + 0.1
