@@ -16,7 +16,8 @@ import numpy as np
 
 from repro.sparse import random as sprand
 from repro.sparse.suite import degree_skew
-from repro.core import binning, csr, predictor, spgemm
+from repro.core import predictor, spgemm
+from repro.core import plan as plan_mod
 from repro.core.flop import flop_per_row
 from .common import timeit, emit
 
@@ -35,13 +36,19 @@ def _cases():
 def run():
     _LAST.clear()
     for fam, a, b in _cases():
-        ad, bd = csr.to_device(a), csr.to_device(b)
         mda, mdb = int(a.row_nnz.max()), int(b.row_nnz.max())
-        plan = binning.build_plan(a, b)
         skew = degree_skew(a)
 
         rows = predictor.draw_sample_rows(
             jax.random.PRNGKey(0), a.nrows, predictor.static_sample_num(a.nrows))
+
+        # binned arms run through the unified plan/execute pipeline
+        # (DESIGN.md §6) — plan_spgemm subsumes build_plan + the binned
+        # allocation, and execute is the cache-served binned executor
+        sp = plan_mod.plan_spgemm(a, b, safety=1.5,
+                                  sample_rows=np.asarray(rows))
+        plan = sp.binning
+        ad, bd = sp.to_device(a, "a"), sp.to_device(b, "b")
 
         t_pred_g = timeit(lambda: jax.block_until_ready(
             predictor.proposed_predict(ad, bd, rows, mda, mdb).nnz_total))
@@ -52,15 +59,14 @@ def run():
         pred = predictor.proposed_predict(ad, bd, rows, mda, mdb)
         alloc = predictor.AllocationPlan.from_prediction(
             np.asarray(pred.structure), np.asarray(floprc), safety=1.5)
-        balloc = predictor.BinnedAllocationPlan.from_prediction(
-            plan, np.asarray(pred.structure), np.asarray(floprc), safety=1.5)
+        balloc = sp.alloc
 
         t_num_g = timeit(lambda: jax.block_until_ready(
             spgemm.spgemm(ad, bd, row_capacity=alloc.row_capacity,
                           max_deg_a=mda, max_deg_b=mdb,
                           block_rows=256).overflow))
         t_num_b = timeit(lambda: jax.block_until_ready(
-            spgemm.spgemm_binned(ad, bd, plan, alloc=balloc).overflow))
+            plan_mod.execute(sp, ad, bd).overflow))
 
         emit(f"binning.{fam}.predict_global.us", t_pred_g * 1e6, "jnp")
         emit(f"binning.{fam}.predict_binned.us", t_pred_b * 1e6, "binned")

@@ -8,10 +8,20 @@ Usage: PYTHONPATH=src python -m benchmarks.run
 from __future__ import annotations
 
 import os
+import subprocess
 import sys
 import traceback
 
 from . import common
+
+
+def _distributed_subprocess() -> None:
+    """The distributed bench needs the 4-device env var BEFORE jax init, so
+    it runs as a subprocess (it writes its own BENCH_distributed.json)."""
+    script = os.path.join(os.path.dirname(__file__), "distributed_bench.py")
+    res = subprocess.run([sys.executable, script], check=False)
+    if res.returncode:
+        raise RuntimeError(f"distributed_bench exited {res.returncode}")
 
 
 def main() -> None:
@@ -28,6 +38,7 @@ def main() -> None:
         ("roofline (dry-run cells)", roofline_bench.run),
         ("moe capacity (beyond-paper)", moe_capacity_bench.run),
         ("partition (load balance)", partition_bench.run),
+        ("distributed (plan/execute vs legacy)", _distributed_subprocess),
     ]
     common.reset_records()
     failed = 0

@@ -1,6 +1,8 @@
-"""Distributed SpGEMM across a device mesh, load-balanced by the paper's
-predicted output structure (DESIGN §3: thread-level binning → shard-level
-partitioning).
+"""Distributed SpGEMM through the unified plan/execute pipeline (DESIGN §6):
+sample → predict (binned, routed) → partition on predicted nnz →
+per-bucket-per-shard capacities → binned routed kernels under shard_map —
+plus the signature-keyed plan cache serving a repeated same-structure
+multiply with zero retraces.
 
 Uses 4 placeholder devices (works on any machine); the same code drives the
 `data` axis of the production mesh.
@@ -14,8 +16,9 @@ import jax
 import numpy as np
 
 from repro.sparse import random as sprand
-from repro.sparse.formats import spgemm_dense_oracle
-from repro.core import distributed, oracle, partition
+from repro.sparse.formats import CSR, spgemm_dense_oracle
+from repro.core import plan as plan_mod
+from repro.core import oracle, partition
 
 # a matrix with strongly varying row compression — the case where
 # FLOP-balanced sharding mis-loads devices
@@ -23,22 +26,39 @@ a = sprand.banded(2000, 2000, 36, 28, seed=1)      # heavy, high-CR rows
 b = sprand.banded(2000, 2000, 12, 40, seed=2)
 
 mesh = jax.make_mesh((4,), ("data",))
-plan = distributed.plan_distributed(a, b, num_shards=4)
+plan = plan_mod.plan_spgemm(a, b, mesh=mesh)
 flopr, _ = oracle.flop_per_row(a, b)
 
 print(f"predicted NNZ(C) = {plan.predicted_nnz:,.0f}; "
-      f"per-row capacity {plan.row_capacity} "
-      f"(upper bound {int(flopr.max())})")
+      f"max bucket capacity {plan.alloc.row_capacity} "
+      f"(upper bound {int(flopr.max())}); "
+      f"{plan.shard_slots():,} output slots per shard")
 print(f"predicted-NNZ-balanced imbalance: {plan.partition.imbalance:.3f}")
 p_flop = partition.balanced_contiguous(flopr, 4)
 nnzr, z = oracle.exact_structure(a, b)
 w = np.add.reduceat(nnzr, p_flop.bounds[:-1])
 print(f"FLOP-balanced imbalance on true work: {w.max()/w.mean():.3f}")
 
-col, val, row_nnz, ofl = distributed.distributed_spgemm(a, b, mesh, plan)
-c = distributed.reassemble(plan, col, val, np.asarray(row_nnz), b.ncols)
+out = plan_mod.execute(plan, a, b)
+print(f"per-shard overflow: {out.shard_overflow.tolist()}")
+c = plan_mod.reassemble(plan, out)
 err = np.abs(c.to_dense() - spgemm_dense_oracle(a, b)).max()
-print(f"4-shard numeric phase: nnz={c.nnz:,} (exact {z:,}), "
-      f"overflow={int(np.asarray(ofl).sum())}, max err={err:.2e}")
+print(f"4-shard numeric phase: nnz={c.nnz:,} (exact {z:,}), max err={err:.2e}")
 assert err < 1e-3 and c.nnz == z
-print("OK — sharded SpGEMM exact, balanced, within predicted buffers.")
+
+# serving: same sparsity structure, new values — the plan cache hands back
+# the compiled executable, zero retraces
+rng = np.random.default_rng(7)
+a2 = CSR(rpt=a.rpt.copy(), col=a.col.copy(),
+         val=rng.standard_normal(a.nnz).astype(np.float32), shape=a.shape)
+traces_before = plan_mod.plan_cache().stats()["traces"]
+plan2 = plan_mod.plan_spgemm(a2, b, mesh=mesh)
+c2 = plan_mod.reassemble(plan2, plan_mod.execute(plan2, a2, b))
+stats = plan_mod.plan_cache().stats()
+err2 = np.abs(c2.to_dense() - spgemm_dense_oracle(a2, b)).max()
+assert err2 < 1e-3 and stats["traces"] == traces_before
+print(f"repeat multiply (new values): max err={err2:.2e}, "
+      f"cache {stats['hits']} hit(s), {stats['traces'] - traces_before} "
+      "retraces")
+print("OK — sharded SpGEMM exact, balanced, within predicted buffers, "
+      "cache-served.")

@@ -1,3 +1,14 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+
+# Unified planner/executor surface (DESIGN.md §6).  Kept as a lazy import
+# so `from repro.core import oracle` doesn't drag jax tracing machinery in.
+
+
+def __getattr__(name):
+    if name in ("plan_spgemm", "execute", "reassemble", "plan_cache",
+                "SpgemmPlan", "PlanCache", "DistSpgemmOut"):
+        from . import plan as _plan
+        return getattr(_plan, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

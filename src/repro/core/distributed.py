@@ -1,7 +1,18 @@
-"""Distributed SpGEMM: shard_map over predicted-NNZ-balanced row partitions.
+"""Distributed SpGEMM — the LEGACY global-pad shard path.
 
-This is the paper's two deliverables — allocation AND load balance — at pod
-scale (DESIGN §3/§4):
+This module is the pre-plan-pipeline baseline: one global ``row_capacity``
+(sized by the worst predicted row in the whole matrix) and one global-degree
+sort-merge pass per shard.  It is kept as the benchmark baseline
+(``benchmarks/distributed_bench.py``: binned-routed vs legacy global-pad)
+and for API compatibility; new code should use the unified planner/executor
+in :mod:`repro.core.plan` (DESIGN.md §6), which runs each shard through the
+binned routed kernels with per-bucket-per-shard capacities::
+
+    plan = plan_spgemm(a, b, mesh=mesh)
+    out  = execute(plan, a, b)        # DistSpgemmOut, per-shard overflow
+    c    = reassemble(plan, out)
+
+The original paper pipeline at pod scale (DESIGN §3/§4):
 
   1. predict the output structure (sampled CR, eq. 4) on host,
   2. partition output rows into `data`-axis shards with ~equal PREDICTED
@@ -64,8 +75,8 @@ def distributed_spgemm(a: CSR, b: CSR, mesh, plan: DistSpGEMMPlan, *,
 
     Returns (col (S, R, cap), val (S, R, cap), row_nnz (S, R), overflow (S,)).
     """
-    mda = max_deg_a or int(a.row_nnz.max())
-    mdb = max_deg_b or int(b.row_nnz.max())
+    mda = max_deg_a or max(1, int(a.row_nnz.max(initial=0)))
+    mdb = max_deg_b or max(1, int(b.row_nnz.max(initial=0)))
     ad = csr_mod.to_device(a)
     bd = csr_mod.to_device(b)
     rows = jnp.asarray(plan.row_table)
@@ -86,9 +97,26 @@ def distributed_spgemm(a: CSR, b: CSR, mesh, plan: DistSpGEMMPlan, *,
     return oc, ov, nnz, ofl
 
 
-def reassemble(plan: DistSpGEMMPlan, col, val, row_nnz, ncols: int) -> CSR:
-    """Host-side: stitch shard outputs back into one CSR (tests/examples)."""
-    rows_out, cols_out, vals_out = [], [], []
+def reassemble(plan: DistSpGEMMPlan, col, val, row_nnz, ncols: int, *,
+               overflow=None, on_overflow: str = "raise") -> CSR:
+    """Host-side: stitch shard outputs back into one CSR (tests/examples).
+
+    Pass the per-shard ``overflow`` array from :func:`distributed_spgemm`
+    to surface dropped entries: nonzero overflow RAISES by default instead
+    of silently returning a truncated matrix (``on_overflow="ignore"``
+    opts back into truncation).  Omitting ``overflow`` keeps the legacy
+    no-check behavior.
+    """
+    if overflow is not None:
+        from .plan import _check_overflow
+        _check_overflow(int(np.asarray(overflow).sum()), overflow,
+                        on_overflow)
+    # seed with typed empties: all-empty shard outputs (every row zero nnz,
+    # or no valid rows at all) must reassemble to an empty CSR, not crash
+    # np.concatenate on an empty list
+    rows_out = [np.zeros(0, np.int64)]
+    cols_out = [np.zeros(0, np.int64)]
+    vals_out = [np.zeros(0, np.float32)]
     col = np.asarray(col)
     val = np.asarray(val)
     for s in range(plan.row_table.shape[0]):

@@ -60,6 +60,22 @@ def static_row_assignment(part: Partition, rows_per_part: int) -> np.ndarray:
     return out
 
 
+def shard_slices(sorted_rows: np.ndarray,
+                 bounds: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-part ``[lo, hi)`` index ranges of an ascending row-id list under
+    contiguous row-range ``bounds`` (len num_parts+1).
+
+    ``sorted_rows[lo[s]:hi[s]]`` are exactly the listed rows owned by part
+    ``s`` — the bucket∩shard intersection the unified planner (``core.plan``)
+    uses to build per-bucket shard tables.
+    """
+    r = np.asarray(sorted_rows)
+    b = np.asarray(bounds)
+    lo = np.searchsorted(r, b[:-1], side="left")
+    hi = np.searchsorted(r, b[1:], side="left")
+    return lo, hi
+
+
 def binned_cost_weights(plan) -> np.ndarray:
     """Per-row cost model under binned execution (``core.binning``): a row
     costs its bucket's padded buffer width, not its own degree — the buffer

@@ -1,0 +1,566 @@
+"""Unified SpGEMM planner/executor with a signature-keyed plan cache.
+
+This module subsumes the previously scattered plan state (``BinningPlan`` +
+``AllocationPlan`` / ``BinnedAllocationPlan`` + ``DistSpGEMMPlan``) into ONE
+pipeline (DESIGN.md §6) that runs the paper's whole point end to end:
+
+  1. **sample → predict**: the binned, routed sampled-CR predictor
+     (``predictor.proposed_predict_binned``, eq. 4) — not the global-pad one;
+  2. **partition on predicted nnz**: output rows split into ``num_shards``
+     contiguous ranges with ~equal *predicted* output nnz
+     (``partition.balanced_contiguous`` — the paper's load-balance claim);
+  3. **capacities per bucket per shard**: each degree bucket's output buffer
+     is sized from the prediction restricted to the rows that bucket owns
+     inside each shard (``predictor.shard_bucket_capacities``) — a hub row
+     inflates only its own (tiny) bucket, never another shard's buffers;
+  4. **execute through the binned routed kernels**: both the single-device
+     and the shard_map executor run every bucket through
+     ``spgemm.routed_spgemm_rows`` (ESC sort / dense-SPA dispatch, optional
+     Pallas kernels via ``kernels.ops``) — the PR 1/2 wins reach pod scale.
+
+**Plan cache.** Executors are built once per *plan key* — the static half of
+the compile contract: matrix shapes, device-CSR capacities (pow2-padded so
+same-family matrices share them), the ordered per-bucket
+``(signature, population, capacity)`` tuples (``RowBucket.signature`` is the
+``BinningPlan.signatures()`` contract from DESIGN.md §4), and the mesh
+fingerprint.  Repeated SpGEMMs over same-shaped bucket sets — the serving
+scenario — look up the same jitted executable and run with ZERO retraces
+(``PlanCache.stats()["traces"]`` is pinned by ``tests/test_plan.py`` /
+``tests/test_distributed.py``).
+
+Public API::
+
+    plan = plan_spgemm(a, b)                    # single device
+    out  = execute(plan, a, b)                  # SpGEMMOut
+    plan = plan_spgemm(a, b, mesh=mesh)         # distributed
+    out  = execute(plan, a, b)                  # DistSpgemmOut
+    c    = reassemble(plan, out, ncols=b.ncols) # host CSR
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.sparse.formats import CSR
+from . import binning as binning_mod
+from . import csr as csr_mod
+from . import oracle
+from . import partition as part_mod
+from . import predictor as predictor_mod
+from .csr import COL_SENTINEL, CSRDevice
+from .spgemm import SpGEMMOut, pad_to_capacity, routed_spgemm_rows
+
+
+# --------------------------------------------------------------------------- #
+# Plan cache — session-level executor registry keyed on plan signatures.
+# --------------------------------------------------------------------------- #
+class PlanCache:
+    """Maps plan keys to compiled (jitted) executors.
+
+    ``hits``/``misses`` count executor lookups; ``traces`` counts actual
+    executor retraces (the executor bodies bump it while being traced), so a
+    cache-served SpGEMM over a same-shaped bucket set shows ``traces``
+    unchanged — the zero-retrace serving contract.
+    """
+
+    def __init__(self) -> None:
+        self._executors: dict = {}
+        self.hits = 0
+        self.misses = 0
+        self.traces = 0
+
+    def executor(self, key, build):
+        """Get-or-build the executor for ``key`` (hashable plan key)."""
+        if key in self._executors:
+            self.hits += 1
+        else:
+            self.misses += 1
+            self._executors[key] = build()
+        return self._executors[key]
+
+    def _note_trace(self) -> None:
+        self.traces += 1
+
+    def stats(self) -> dict:
+        return dict(size=len(self._executors), hits=self.hits,
+                    misses=self.misses, traces=self.traces)
+
+    def clear(self) -> None:
+        self._executors.clear()
+        self.hits = self.misses = self.traces = 0
+
+
+_DEFAULT_CACHE = PlanCache()
+
+
+def plan_cache() -> PlanCache:
+    """The session-level default plan cache."""
+    return _DEFAULT_CACHE
+
+
+# --------------------------------------------------------------------------- #
+# Plan dataclasses
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class BucketShardTable:
+    """One bucket's static shard execution table (distributed plans).
+
+    ``table[s]`` lists the bucket rows shard ``s`` computes, padded to the
+    bucket's max per-shard population ``rows_pb`` by repeating the shard's
+    last owned row (or any bucket row when the shard owns none — padded
+    outputs are masked off by ``valid`` at reassembly/overflow time).
+    """
+
+    table: np.ndarray       # (num_shards, rows_pb) int32
+    valid: np.ndarray       # (num_shards, rows_pb) bool
+    capacity: int           # static per-row output slots (max per-shard need)
+
+    @property
+    def rows_pb(self) -> int:
+        return int(self.table.shape[1])
+
+
+@dataclasses.dataclass(eq=False)   # identity compare; plans match via .key
+class SpgemmPlan:
+    """The unified plan: prediction + partition + capacities + executor key."""
+
+    binning: binning_mod.BinningPlan
+    alloc: predictor_mod.BinnedAllocationPlan
+    structure: np.ndarray           # predicted nnz per output row (float64)
+    flopr: np.ndarray               # FLOP per output row (int64)
+    predicted_nnz: float
+    compression_ratio: float
+    sample_rows: np.ndarray
+    shape_a: tuple[int, int]
+    shape_b: tuple[int, int]
+    cap_a: int                      # device-CSR col/val capacity (pow2-padded)
+    cap_b: int
+    safety: float
+    use_kernel: bool
+    # distributed-only (num_shards == 0 → single device)
+    num_shards: int = 0
+    axis: str = "data"
+    partition: part_mod.Partition | None = None
+    shard_tables: tuple[BucketShardTable, ...] = ()
+    shard_capacities: np.ndarray | None = None  # (buckets, shards) per-shard need
+    mesh: object = None             # not part of the key (see _mesh_key)
+    _device_args: tuple | None = dataclasses.field(default=None, repr=False)
+    # ((host_a, host_b), (ad, bd)) from planning — execute() on the planned
+    # operands reuses the prediction pass's upload instead of a second H2D
+    _planned_pair: tuple | None = dataclasses.field(default=None, repr=False)
+
+    @property
+    def distributed(self) -> bool:
+        return self.num_shards > 0
+
+    def device_args(self) -> tuple:
+        """Executor row-table args (+ inverse perm for local plans), uploaded
+        once per plan — the cache-served serving path pays pure dispatch."""
+        if self._device_args is None:
+            if self.distributed:
+                args = tuple(jnp.asarray(t.table) for t in self.shard_tables)
+            else:
+                perm = jnp.asarray(
+                    self.binning.inverse_perm().astype(np.int32))
+                args = (perm,) + tuple(jnp.asarray(bk.rows)
+                                       for bk in self.binning.buckets)
+            self._device_args = args
+        return self._device_args
+
+    @property
+    def key(self) -> tuple:
+        """The static half of the compile contract (mesh fingerprint added
+        at executor-lookup time, see :func:`_executor_key`)."""
+        if self.distributed:
+            buckets = tuple(
+                (bk.signature, t.rows_pb, t.capacity)
+                for bk, t in zip(self.binning.buckets, self.shard_tables))
+        else:
+            buckets = tuple(
+                (bk.signature, bk.n_rows, int(cap))
+                for bk, cap in zip(self.binning.buckets,
+                                   self.alloc.bucket_capacities))
+        return ("spgemm-plan", self.num_shards, self.axis, self.use_kernel,
+                self.shape_a, self.shape_b, self.cap_a, self.cap_b,
+                self.alloc.row_capacity, buckets)
+
+    def shard_slots(self) -> int:
+        """Output slots each shard allocates under this plan
+        (Σ buckets rows_pb·capacity; SPMD — identical on every shard)."""
+        if not self.distributed:
+            return int(self.alloc.total_capacity)
+        return int(sum(t.rows_pb * t.capacity for t in self.shard_tables))
+
+    def to_device(self, m: CSR, which: str) -> CSRDevice:
+        """Convert one operand at the plan's padded device capacity."""
+        cap = self.cap_a if which == "a" else self.cap_b
+        shape = self.shape_a if which == "a" else self.shape_b
+        if m.shape != shape:
+            raise ValueError(f"operand {which} shape {m.shape} != planned "
+                             f"{shape}")
+        if m.nnz > cap:
+            raise ValueError(f"operand {which} nnz {m.nnz} exceeds planned "
+                             f"device capacity {cap}")
+        return csr_mod.to_device(m, capacity=cap)
+
+    def stats(self) -> dict:
+        out = dict(
+            predicted_nnz=round(float(self.predicted_nnz), 1),
+            compression_ratio=round(float(self.compression_ratio), 4),
+            num_buckets=len(self.binning.buckets),
+            lane_reduction=round(self.binning.lane_reduction, 3),
+            route_rows=self.binning.route_rows(),
+            bucket_capacities=list(self.alloc.bucket_capacities),
+            total_capacity=int(self.alloc.total_capacity),
+        )
+        if self.distributed:
+            out.update(
+                num_shards=self.num_shards,
+                imbalance=round(self.partition.imbalance, 4),
+                shard_slots=self.shard_slots(),
+                bucket_rows_per_shard=[t.rows_pb for t in self.shard_tables],
+                shard_bucket_capacities=[t.capacity for t in self.shard_tables],
+            )
+        return out
+
+
+class DistSpgemmOut(NamedTuple):
+    """Distributed numeric-phase output: per-bucket stacked shard blocks."""
+
+    cols: tuple        # per bucket: (num_shards, rows_pb, cap_b) int32
+    vals: tuple        # per bucket: (num_shards, rows_pb, cap_b) float32
+    row_nnz: tuple     # per bucket: (num_shards, rows_pb) int32 — true nnz
+    shard_overflow: np.ndarray   # (num_shards,) int64 — valid rows only
+
+
+# --------------------------------------------------------------------------- #
+# Planning
+# --------------------------------------------------------------------------- #
+def _device_capacity(nnz: int) -> int:
+    """pow2-padded device-CSR capacity: same-family matrices land on the
+    same padded capacity, keeping the executor's traced shapes — and hence
+    the plan cache — shared across them."""
+    return binning_mod.ceil_pow2(max(8, int(nnz)))
+
+
+def _mesh_key(mesh) -> tuple:
+    if mesh is None:
+        return ()
+    return (tuple(mesh.axis_names),
+            tuple(int(d.id) for d in np.asarray(mesh.devices).flat))
+
+
+def _executor_key(plan: SpgemmPlan, mesh) -> tuple:
+    return plan.key + (_mesh_key(mesh),)
+
+
+def _build_shard_tables(binplan: binning_mod.BinningPlan,
+                        partn: part_mod.Partition,
+                        static_caps) -> tuple[BucketShardTable, ...]:
+    bounds = np.asarray(partn.bounds)
+    num_shards = partn.num_parts
+    tables = []
+    for bucket, cap in zip(binplan.buckets, static_caps):
+        lo, hi = part_mod.shard_slices(bucket.rows, bounds)
+        counts = hi - lo
+        rows_pb = int(max(1, counts.max())) if counts.size else 1
+        table = np.empty((num_shards, rows_pb), dtype=np.int32)
+        valid = np.zeros((num_shards, rows_pb), dtype=bool)
+        for s in range(num_shards):
+            ids = bucket.rows[lo[s]:hi[s]]
+            n = ids.size
+            if n:
+                table[s, :n] = ids
+                table[s, n:] = ids[-1]
+            else:
+                # shard owns no rows of this bucket: pad with any bucket row
+                # (stays inside the bucket's degree envelope; discarded)
+                table[s, :] = bucket.rows[0]
+            valid[s, :n] = True
+        tables.append(BucketShardTable(table=table, valid=valid,
+                                       capacity=int(cap)))
+    return tuple(tables)
+
+
+def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
+                axis: str = "data", seed: int = 0, safety: float = 1.3,
+                route: str = "auto", use_kernel: bool = False,
+                sample_rows: np.ndarray | None = None,
+                min_rows: int = binning_mod.DEFAULT_MIN_ROWS,
+                deg_align: int = 1) -> SpgemmPlan:
+    """Plan ``C = A·B``: sample → predict (binned, routed) → partition on
+    predicted nnz → per-bucket(-per-shard) capacities.
+
+    ``mesh``/``num_shards`` select distributed planning (``num_shards``
+    alone plans without devices — useful for planning-time analysis; a mesh
+    can then be supplied to :func:`execute`).  ``a``/``b`` are host ``CSR``;
+    planning is a launch-time host step like ``core.partition``.
+    """
+    assert a.ncols == b.nrows, (a.shape, b.shape)
+    binplan = binning_mod.build_plan(a, b, route=route, min_rows=min_rows,
+                                     deg_align=deg_align)
+    flopr, total_flop = oracle.flop_per_row(a, b)
+    if sample_rows is None:
+        sample_rows = (oracle.sample_rows(a.nrows, seed) if a.nrows
+                       else np.zeros(0, dtype=np.int64))
+    sample_rows = np.asarray(sample_rows, dtype=np.int64)
+
+    cap_a = _device_capacity(a.nnz)
+    cap_b = _device_capacity(b.nnz)
+    devpair = None
+    if total_flop > 0 and sample_rows.size:
+        ad = csr_mod.to_device(a, capacity=cap_a)
+        bd = csr_mod.to_device(b, capacity=cap_b)
+        devpair = (ad, bd)
+        pred = predictor_mod.proposed_predict_binned(
+            ad, bd, jnp.asarray(sample_rows, dtype=jnp.int32), binplan,
+            use_kernel=use_kernel, floprc=flopr)
+        structure = np.asarray(pred.structure, dtype=np.float64)
+        predicted_nnz = float(pred.nnz_total)
+        cr = float(pred.compression_ratio)
+        if not np.isfinite(structure).all() or cr <= 0:
+            # sampled rows had no products (f* = 0): fall back to the
+            # upper-bound structure — always safe, never over-allocates
+            # past flopr by construction of the capacity rule.
+            structure = flopr.astype(np.float64)
+            predicted_nnz = float(total_flop)
+            cr = 1.0
+    else:
+        structure = np.zeros(a.nrows, dtype=np.float64)
+        predicted_nnz = 0.0
+        cr = 1.0
+
+    alloc = predictor_mod.BinnedAllocationPlan.from_prediction(
+        binplan, structure, flopr, safety=safety)
+
+    plan = SpgemmPlan(
+        binning=binplan, alloc=alloc, structure=structure, flopr=flopr,
+        predicted_nnz=predicted_nnz, compression_ratio=cr,
+        sample_rows=sample_rows, shape_a=a.shape, shape_b=b.shape,
+        cap_a=cap_a, cap_b=cap_b, safety=safety, use_kernel=use_kernel)
+    if devpair is not None:
+        plan._planned_pair = ((a, b), devpair)
+
+    if mesh is not None or num_shards:
+        shards = int(num_shards if num_shards else mesh.shape[axis])
+        partn = part_mod.balanced_contiguous(structure, shards)
+        caps_mat, static_caps = predictor_mod.shard_bucket_capacities(
+            binplan, structure, flopr, partn.bounds, safety=safety)
+        plan.num_shards = shards
+        plan.axis = axis
+        plan.partition = partn
+        plan.shard_tables = _build_shard_tables(binplan, partn, static_caps)
+        plan.shard_capacities = caps_mat
+        plan.mesh = mesh
+    return plan
+
+
+# --------------------------------------------------------------------------- #
+# Executors (cache-built, trace-counted)
+# --------------------------------------------------------------------------- #
+def _bucket_meta(bucket: binning_mod.RowBucket, cap: int) -> tuple:
+    """Hashable static execution metadata for one bucket."""
+    return (bucket.deg_a, bucket.deg_b, bucket.block_rows, bucket.route,
+            bucket.tile_n, bucket.n_tiles, bucket.span, int(cap))
+
+
+def _run_bucket(ad: CSRDevice, bd: CSRDevice, rows: jax.Array, meta: tuple,
+                use_kernel: bool) -> SpGEMMOut:
+    deg_a, deg_b, block_rows, route, tile_n, n_tiles, span, cap = meta
+    return routed_spgemm_rows(
+        ad, bd, rows, row_capacity=cap, deg_a=deg_a, deg_b=deg_b,
+        block_rows=block_rows, route=route, tile_n=tile_n, n_tiles=n_tiles,
+        span=span, use_kernel=use_kernel)
+
+
+def _build_local_executor(metas: tuple, cap_out: int, use_kernel: bool,
+                          cache: PlanCache):
+    """Single-device executor: per-bucket routed passes + one concat/perm
+    assembly — the :func:`repro.core.spgemm.spgemm_binned` dataflow inside
+    one cached jit (row ids and the inverse permutation stay traced so the
+    compiled program serves every same-keyed plan)."""
+
+    @jax.jit
+    def run(ad, bd, perm, *tables):
+        cache._note_trace()
+        parts_c, parts_v, parts_n = [], [], []
+        overflow = jnp.int32(0)
+        for meta, rows in zip(metas, tables):
+            c, v, n, of = _run_bucket(ad, bd, rows, meta, use_kernel)
+            c, v = pad_to_capacity(c, v, cap_out)
+            parts_c.append(c)
+            parts_v.append(v)
+            parts_n.append(n.astype(jnp.int32))
+            overflow = overflow + of.astype(jnp.int32)
+        return SpGEMMOut(jnp.concatenate(parts_c, axis=0)[perm],
+                         jnp.concatenate(parts_v, axis=0)[perm],
+                         jnp.concatenate(parts_n, axis=0)[perm],
+                         overflow)
+
+    return run
+
+
+def _build_dist_executor(metas: tuple, mesh, axis: str, use_kernel: bool,
+                         cache: PlanCache):
+    """shard_map executor: every shard runs every bucket's routed pass over
+    its own row table — the binned/routed backend at pod scale.  A/B are
+    replicated (index/value arrays broadcast once, as in the legacy path);
+    only the row tables are sharded.  Per-shard overflow is derived host-
+    side from the returned true ``row_nnz`` and the plan's valid masks."""
+
+    def shard_fn(ad, bd, *tables):
+        cache._note_trace()
+        outs = []
+        for meta, table in zip(metas, tables):
+            c, v, n, _ = _run_bucket(ad, bd, table[0], meta, use_kernel)
+            outs.extend([c[None], v[None], n.astype(jnp.int32)[None]])
+        return tuple(outs)
+
+    nb = len(metas)
+    in_specs = (P(), P()) + (P(axis, None),) * nb
+    out_specs = tuple(s for _ in range(nb)
+                      for s in (P(axis, None, None), P(axis, None, None),
+                                P(axis, None)))
+    fn = shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    return jax.jit(fn)
+
+
+def _coerce_pair(plan: SpgemmPlan, a, b) -> tuple[CSRDevice, CSRDevice]:
+    def one(m, which: str, idx: int) -> CSRDevice:
+        cap = plan.cap_a if which == "a" else plan.cap_b
+        shape = plan.shape_a if which == "a" else plan.shape_b
+        if isinstance(m, CSRDevice):
+            # a pre-converted operand must sit at the plan's padded
+            # capacity, or the cached executor would silently retrace per
+            # distinct nnz (voiding the zero-retrace serving contract) —
+            # or worse, compute a different matrix without complaint
+            if m.shape != shape or m.capacity != cap:
+                raise ValueError(
+                    f"operand {which}: CSRDevice shape/capacity "
+                    f"{m.shape}/{m.capacity} does not match the plan's "
+                    f"{shape}/{cap} — convert with plan.to_device()")
+            return m
+        if plan._planned_pair is not None and m is plan._planned_pair[0][idx]:
+            return plan._planned_pair[1][idx]
+        return plan.to_device(m, which)
+
+    return one(a, "a", 0), one(b, "b", 1)
+
+
+def execute(plan: SpgemmPlan, a, b, *, mesh=None, cache: PlanCache | None = None):
+    """Run the planned numeric phase.
+
+    Single-device plans return a :class:`repro.core.spgemm.SpGEMMOut`;
+    distributed plans return a :class:`DistSpgemmOut` (feed to
+    :func:`reassemble`).  ``a``/``b`` may be host ``CSR`` (converted at the
+    plan's padded capacities) or pre-converted ``CSRDevice``.  Executors are
+    served from ``cache`` (default: the session cache) keyed on the plan's
+    static signature — a second same-keyed plan reuses the compiled
+    executable with zero retraces.
+    """
+    cache = cache if cache is not None else _DEFAULT_CACHE
+    ad, bd = _coerce_pair(plan, a, b)
+    if not plan.binning.buckets:
+        cap = plan.alloc.row_capacity
+        empty = SpGEMMOut(jnp.full((0, cap), COL_SENTINEL, jnp.int32),
+                          jnp.zeros((0, cap), jnp.float32),
+                          jnp.zeros((0,), jnp.int32), jnp.int32(0))
+        if not plan.distributed:
+            return empty
+        return DistSpgemmOut((), (), (),
+                             np.zeros(plan.num_shards, dtype=np.int64))
+
+    if not plan.distributed:
+        metas = tuple(_bucket_meta(bk, cap)
+                      for bk, cap in zip(plan.binning.buckets,
+                                         plan.alloc.bucket_capacities))
+        run = cache.executor(
+            _executor_key(plan, None),
+            lambda: _build_local_executor(metas, plan.alloc.row_capacity,
+                                          plan.use_kernel, cache))
+        return run(ad, bd, *plan.device_args())
+
+    mesh = mesh if mesh is not None else plan.mesh
+    if mesh is None:
+        raise ValueError("distributed plan needs a mesh (plan_spgemm(mesh=...)"
+                         " or execute(..., mesh=...))")
+    if int(mesh.shape[plan.axis]) != plan.num_shards:
+        raise ValueError(
+            f"plan was built for {plan.num_shards} shards but mesh axis "
+            f"{plan.axis!r} has {int(mesh.shape[plan.axis])} devices — "
+            "re-plan with this mesh")
+    metas = tuple(_bucket_meta(bk, t.capacity)
+                  for bk, t in zip(plan.binning.buckets, plan.shard_tables))
+    run = cache.executor(
+        _executor_key(plan, mesh),
+        lambda: _build_dist_executor(metas, mesh, plan.axis,
+                                     plan.use_kernel, cache))
+    flat = run(ad, bd, *plan.device_args())
+    cols, vals, nnzs = flat[0::3], flat[1::3], flat[2::3]
+    overflow = np.zeros(plan.num_shards, dtype=np.int64)
+    for t, n in zip(plan.shard_tables, nnzs):
+        over = np.maximum(np.asarray(n, dtype=np.int64) - t.capacity, 0)
+        overflow += np.where(t.valid, over, 0).sum(axis=1)
+    return DistSpgemmOut(tuple(cols), tuple(vals), tuple(nnzs), overflow)
+
+
+# --------------------------------------------------------------------------- #
+# Reassembly (host-side; tests/examples)
+# --------------------------------------------------------------------------- #
+def _check_overflow(total: int, per_shard, on_overflow: str) -> None:
+    if on_overflow not in ("raise", "ignore"):
+        raise ValueError(f"on_overflow must be 'raise' or 'ignore', got "
+                         f"{on_overflow!r}")
+    if total and on_overflow == "raise":
+        raise ValueError(f"SpGEMM overflow: {total} entries dropped "
+                         f"(per shard: {list(np.asarray(per_shard))}); "
+                         "re-plan with a higher safety factor or pass "
+                         "on_overflow='ignore'")
+
+
+def reassemble(plan: SpgemmPlan, out, ncols: int | None = None, *,
+               on_overflow: str = "raise") -> CSR:
+    """Stitch an :func:`execute` result back into one host CSR.
+
+    Accepts a local ``SpGEMMOut`` or a distributed ``DistSpgemmOut``.
+    Overflow (entries dropped for capacity) RAISES by default instead of
+    silently truncating the result — pass ``on_overflow="ignore"`` to get
+    the truncated matrix anyway.
+    """
+    ncols = int(ncols if ncols is not None else plan.shape_b[1])
+    nrows = plan.shape_a[0]
+    rows_out = [np.zeros(0, np.int64)]
+    cols_out = [np.zeros(0, np.int64)]
+    vals_out = [np.zeros(0, np.float32)]
+    if isinstance(out, DistSpgemmOut):
+        _check_overflow(int(out.shard_overflow.sum()), out.shard_overflow,
+                        on_overflow)
+        for t, c_b, v_b in zip(plan.shard_tables, out.cols, out.vals):
+            cap = t.capacity
+            c_b = np.asarray(c_b).reshape(-1, cap)     # (S·rows_pb, cap)
+            v_b = np.asarray(v_b).reshape(-1, cap)
+            m = (c_b != COL_SENTINEL) & t.valid.reshape(-1)[:, None]
+            counts = m.sum(axis=1)
+            rows_out.append(np.repeat(
+                t.table.reshape(-1).astype(np.int64), counts))
+            cols_out.append(c_b[m].astype(np.int64))
+            vals_out.append(v_b[m])
+    else:
+        _check_overflow(int(out.overflow), [int(out.overflow)], on_overflow)
+        col = np.asarray(out.col)
+        val = np.asarray(out.val)
+        m = col != COL_SENTINEL
+        counts = m.sum(axis=1)
+        rows_out.append(np.repeat(np.arange(nrows, dtype=np.int64), counts))
+        cols_out.append(col[m].astype(np.int64))
+        vals_out.append(val[m])
+    return CSR.from_coo(np.concatenate(rows_out), np.concatenate(cols_out),
+                        np.concatenate(vals_out).astype(np.float32),
+                        (nrows, ncols), dedup=False)

@@ -203,7 +203,8 @@ def _binned_floprc(a: CSRDevice, b: CSRDevice, plan: BinningPlan) -> jax.Array:
 
 def proposed_predict_binned(a: CSRDevice, b: CSRDevice, rows,
                             plan: BinningPlan,
-                            use_kernel: bool = False) -> PredictionDev:
+                            use_kernel: bool = False,
+                            floprc=None) -> PredictionDev:
     """THE PAPER'S METHOD (eq. 4), bucket-iterated.
 
     Identical outputs to :func:`proposed_predict` — z*/f* are exact integer
@@ -211,8 +212,13 @@ def proposed_predict_binned(a: CSRDevice, b: CSRDevice, rows,
     same values — but each bucket's gather/sort buffer is (S_bin, DA_bin·DB_bin)
     instead of (S, DA·DB).  With ``use_kernel`` the per-bucket pass is the
     fused flop+symbolic Pallas kernel and floprC runs through the binned flop
-    kernel."""
-    if use_kernel:
+    kernel.  ``floprc`` (Algorithm 1's per-row FLOP) may be passed in by
+    callers that already computed it (the unified planner) to skip the
+    redundant pass."""
+    if floprc is not None:
+        floprc = jnp.asarray(floprc)
+        total_flop = jnp.sum(floprc)
+    elif use_kernel:
         floprc = _binned_floprc(a, b, plan)
         total_flop = jnp.sum(floprc)
     else:
@@ -294,3 +300,40 @@ class BinnedAllocationPlan:
             bucket_capacities=tuple(caps),
             row_capacity=max(caps) if caps else align,
             total_capacity=total, safety=safety)
+
+
+def shard_bucket_capacities(plan: BinningPlan, pred_structure, flopr,
+                            bounds, safety: float = 1.2, align: int = 8
+                            ) -> tuple[np.ndarray, tuple[int, ...]]:
+    """Per-(bucket, shard) predicted row capacities for distributed execution.
+
+    Returns ``(caps, static_caps)``: ``caps[i, s]`` is the capacity bucket
+    ``i`` needs for the rows it owns inside shard ``s``'s contiguous row
+    range (0 where the intersection is empty), sized by the same
+    ``min(ceil(pred·safety), flopr)`` rule as :class:`AllocationPlan` but
+    restricted to that intersection; ``static_caps[i]`` is the max over
+    shards — the one static shape the SPMD executor can compile bucket ``i``
+    with.
+
+    This replaces the legacy ``plan_distributed`` rule that sized every
+    shard from the GLOBAL max predicted row: a hub row now inflates only its
+    own (small) bucket's capacity, and every other bucket's buffers stay
+    sized by their own rows — see the regression test in
+    ``tests/test_plan.py``.
+    """
+    from .partition import shard_slices
+    ps = np.asarray(pred_structure, dtype=np.float64)
+    fl = np.asarray(flopr, dtype=np.float64)
+    bounds = np.asarray(bounds)
+    num_shards = bounds.size - 1
+    caps = np.zeros((len(plan.buckets), num_shards), dtype=np.int64)
+    for i, bucket in enumerate(plan.buckets):
+        lo, hi = shard_slices(bucket.rows, bounds)
+        for s in range(num_shards):
+            ids = bucket.rows[lo[s]:hi[s]]
+            if ids.size:
+                caps[i, s] = AllocationPlan.from_prediction(
+                    ps[ids], fl[ids], safety=safety, align=align).row_capacity
+    static_caps = tuple(int(max(align, caps[i].max()))
+                        for i in range(len(plan.buckets)))
+    return caps, static_caps

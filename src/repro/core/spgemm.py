@@ -191,6 +191,50 @@ def spgemm(a: CSRDevice, b: CSRDevice, *, row_capacity: int,
                        block_rows=block_rows)
 
 
+def routed_spgemm_rows(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
+                       row_capacity: int, deg_a: int, deg_b: int,
+                       block_rows: int, route: str = "esc", tile_n: int = 0,
+                       n_tiles: int = 0, span: int = 0,
+                       use_kernel: bool = False) -> SpGEMMOut:
+    """One bucket's numeric phase on its planned accumulator route.
+
+    THE per-bucket dispatch shared by :func:`spgemm_binned` and the
+    plan/execute executors (``core.plan``) — single and distributed callers
+    running a bucket through this one function is what makes their outputs
+    interchangeable (identical ``col``/``row_nnz``/``overflow``; ``val`` to
+    float tolerance across routes, see DESIGN.md §5/§6).
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return SpGEMMOut(*kops.spgemm_numeric_routed(
+            a, b, rows, max_deg_a=deg_a, max_deg_b=deg_b,
+            row_capacity=row_capacity, block_rows=block_rows,
+            route=route, tile_n=tile_n, n_tiles=n_tiles))
+    if route == ROUTE_SPA:
+        return spgemm_rows_spa(a, b, rows, row_capacity=row_capacity,
+                               max_deg_a=deg_a, max_deg_b=deg_b,
+                               block_rows=block_rows, span=span)
+    return spgemm_rows(a, b, rows, row_capacity=row_capacity,
+                       max_deg_a=deg_a, max_deg_b=deg_b,
+                       block_rows=block_rows)
+
+
+def pad_to_capacity(c: jax.Array, v: jax.Array,
+                    cap_out: int) -> tuple[jax.Array, jax.Array]:
+    """Widen a bucket's ``(rows, cap)`` col/val blocks to ``cap_out`` slots
+    (sentinel/zero fill) — the shared output-assembly contract of
+    :func:`spgemm_binned` and the ``core.plan`` executors."""
+    cap = c.shape[1]
+    if cap >= cap_out:
+        return c, v
+    c = jnp.concatenate(
+        [c, jnp.full((c.shape[0], cap_out - cap), COL_SENTINEL, jnp.int32)],
+        axis=1)
+    v = jnp.concatenate(
+        [v, jnp.zeros((v.shape[0], cap_out - cap), jnp.float32)], axis=1)
+    return c, v
+
+
 def spgemm_binned(a: CSRDevice, b: CSRDevice, plan, *,
                   alloc, use_kernel: bool = False) -> SpGEMMOut:
     """C = A·B numeric phase, bucket-iterated (DESIGN.md §4).
@@ -220,29 +264,12 @@ def spgemm_binned(a: CSRDevice, b: CSRDevice, plan, *,
         if bucket.n_rows == 0:
             continue
         rows_d = jnp.asarray(bucket.rows)
-        if use_kernel:
-            from repro.kernels import ops as kops
-            c, v, n, of = kops.spgemm_numeric_routed(
-                a, b, rows_d, max_deg_a=bucket.deg_a, max_deg_b=bucket.deg_b,
-                row_capacity=cap, block_rows=bucket.block_rows,
-                route=bucket.route, tile_n=bucket.tile_n,
-                n_tiles=bucket.n_tiles)
-        elif bucket.route == ROUTE_SPA:
-            c, v, n, of = spgemm_rows_spa(
-                a, b, rows_d, row_capacity=cap, max_deg_a=bucket.deg_a,
-                max_deg_b=bucket.deg_b, block_rows=bucket.block_rows,
-                span=bucket.span)
-        else:
-            c, v, n, of = spgemm_rows(
-                a, b, rows_d, row_capacity=cap, max_deg_a=bucket.deg_a,
-                max_deg_b=bucket.deg_b, block_rows=bucket.block_rows)
-        if cap < cap_out:
-            c = jnp.concatenate(
-                [c, jnp.full((c.shape[0], cap_out - cap), COL_SENTINEL,
-                             jnp.int32)], axis=1)
-            v = jnp.concatenate(
-                [v, jnp.zeros((v.shape[0], cap_out - cap), jnp.float32)],
-                axis=1)
+        c, v, n, of = routed_spgemm_rows(
+            a, b, rows_d, row_capacity=cap, deg_a=bucket.deg_a,
+            deg_b=bucket.deg_b, block_rows=bucket.block_rows,
+            route=bucket.route, tile_n=bucket.tile_n, n_tiles=bucket.n_tiles,
+            span=bucket.span, use_kernel=use_kernel)
+        c, v = pad_to_capacity(c, v, cap_out)
         parts_c.append(c)
         parts_v.append(v)
         parts_n.append(n.astype(jnp.int32))

@@ -96,12 +96,12 @@ def fused_flop_symbolic_routed(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
 
 def spgemm_numeric(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
                    max_deg_a: int, max_deg_b: int, row_capacity: int,
-                   block_rows: int = 8):
+                   block_rows: int = 8, rownnz_b=None):
     """Kernel numeric phase + XLA compaction → (col, val, row_nnz, overflow)."""
     cols, vals, first = _num_k.spgemm_numeric_pallas(
         a.rpt, a.col, a.val, b.rpt, b.col, b.val, rows,
         max_deg_a=max_deg_a, max_deg_b=max_deg_b, block_rows=block_rows,
-        interpret=_interpret())
+        interpret=_interpret(), rownnz_b=rownnz_b)
     return _num_k.compact(cols, vals, first, row_capacity)
 
 
@@ -138,7 +138,7 @@ def spgemm_numeric_routed(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
             block_rows=block_rows, rownnz_b=rownnz_b)
     return spgemm_numeric(a, b, rows, max_deg_a=max_deg_a,
                           max_deg_b=max_deg_b, row_capacity=row_capacity,
-                          block_rows=block_rows)
+                          block_rows=block_rows, rownnz_b=rownnz_b)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,

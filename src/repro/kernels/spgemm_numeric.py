@@ -58,16 +58,19 @@ def _kernel(rows_ref, a_rpt_ref, a_col_ref, a_val_ref, b_rpt_ref, b_col_ref,
     "max_deg_a", "max_deg_b", "block_rows", "interpret"))
 def spgemm_numeric_pallas(a_rpt, a_col, a_val, b_rpt, b_col, b_val, rows, *,
                           max_deg_a: int, max_deg_b: int, block_rows: int = 8,
-                          interpret: bool = True):
+                          interpret: bool = True, rownnz_b=None):
     """Sorted/run-summed products for ``rows``.
 
     Returns (sorted_cols (R, F2), run_sums_at_first (R, F2), first_mask (R, F2)).
+    ``rownnz_b`` (= ``jnp.diff(b_rpt)``) may be passed in so bucket-iterated
+    callers hoist the diff out of their per-bucket calls.
     """
     r = rows.shape[0]
     nblocks = -(-r // block_rows)
     pad_r = nblocks * block_rows
     rows_p = pad_row_ids(rows, block_rows)
-    rownnz_b = jnp.diff(b_rpt)
+    if rownnz_b is None:
+        rownnz_b = jnp.diff(b_rpt)
     f2 = next_pow2(max_deg_a * max_deg_b)
     cols, vals, first = pl.pallas_call(
         functools.partial(_kernel, block_rows=block_rows,

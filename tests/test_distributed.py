@@ -1,11 +1,15 @@
-"""Distributed SpGEMM (shard_map + predicted-NNZ balance) on a 4-device mesh.
+"""Distributed SpGEMM on a 4-device mesh: legacy global-pad baseline plus the
+unified plan/execute pipeline (core/plan.py).
 
-Subprocess (device-count env must precede jax init)."""
+Mesh tests run in subprocesses (device-count env must precede jax init);
+host-only legacy fixes (reassemble on all-empty outputs, overflow
+surfacing) run in-process."""
 import json
 import os
 import subprocess
 import sys
 
+import numpy as np
 import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -26,7 +30,8 @@ b = sprand.banded(600, 600, 12, 20, seed=6)
 mesh = jax.make_mesh((4,), ("data",))
 plan = distributed.plan_distributed(a, b, num_shards=4)
 col, val, row_nnz, ofl = distributed.distributed_spgemm(a, b, mesh, plan)
-c = distributed.reassemble(plan, col, val, np.asarray(row_nnz), b.ncols)
+c = distributed.reassemble(plan, col, val, np.asarray(row_nnz), b.ncols,
+                           overflow=np.asarray(ofl))
 ref = spgemm_dense_oracle(a, b)
 err = float(np.abs(c.to_dense() - ref).max())
 _, z = oracle.exact_structure(a, b)
@@ -36,16 +41,143 @@ print(json.dumps(dict(err=err, overflow=int(np.asarray(ofl).sum()),
                       cap=plan.row_capacity, ub=int(flopr.max()))))
 """
 
+# The acceptance contract of the unified pipeline (ISSUE 3): on every suite
+# family the distributed binned-routed path must match single-device
+# spgemm_binned bitwise on symbolic counts (row_nnz/col) and to float
+# tolerance on values; the plan cache must serve a second same-signature
+# pair with ZERO executor retraces.
+PLAN_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+
+from repro.sparse import random as sprand
+from repro.sparse.formats import CSR, spgemm_dense_oracle
+from repro.core import plan as plan_mod, spgemm
+
+def revalue(m, seed):
+    rng = np.random.default_rng(seed)
+    return CSR(rpt=m.rpt.copy(), col=m.col.copy(),
+               val=rng.standard_normal(m.nnz).astype(np.float32),
+               shape=m.shape)
+
+mesh = jax.make_mesh((4,), ("data",))
+fams = [
+    ("er", sprand.erdos_renyi(500, 500, 4, seed=25),
+     sprand.erdos_renyi(500, 500, 3, seed=26)),
+    ("pl", sprand.power_law(700, 700, 5, 1.5, seed=21),
+     sprand.power_law(700, 700, 4, 1.6, seed=22)),
+    ("rmat", sprand.rmat(500, 500, 2500, seed=31),
+     sprand.rmat(500, 500, 2000, seed=32)),
+    ("band", sprand.banded(600, 600, 18, 16, seed=5),
+     sprand.banded(600, 600, 12, 20, seed=6)),
+    ("fem", sprand.banded(400, 400, 40, 30, seed=51),
+     sprand.banded(400, 400, 32, 28, seed=52)),
+]
+out = {}
+for fam, a, b in fams:
+    use_kernel = fam == "band"      # routed Pallas dispatch under shard_map
+    p = plan_mod.plan_spgemm(a, b, mesh=mesh, safety=2.0,
+                             use_kernel=use_kernel)
+    res = plan_mod.execute(p, a, b)
+    c = plan_mod.reassemble(p, res)
+    # single-device binned reference, same sample/safety
+    pl = plan_mod.plan_spgemm(a, b, safety=2.0, sample_rows=p.sample_rows)
+    cl = plan_mod.reassemble(pl, plan_mod.execute(pl, a, b))
+    assert (c.rpt == cl.rpt).all(), fam + ": symbolic row counts differ"
+    assert (c.col == cl.col).all(), fam + ": columns differ"
+    vdiff = float(np.abs(c.val - cl.val).max())
+    ref_err = float(np.abs(c.to_dense() - spgemm_dense_oracle(a, b)).max())
+    out[fam] = dict(vdiff=vdiff, ref_err=ref_err,
+                    overflow=int(res.shard_overflow.sum()),
+                    imbalance=round(float(p.partition.imbalance), 4))
+
+# plan-cache serving contract: same-signature pair, zero retraces
+cache = plan_mod.PlanCache()
+fam, a, b = fams[3]
+p1 = plan_mod.plan_spgemm(a, b, mesh=mesh, safety=2.0)
+plan_mod.execute(p1, a, b, cache=cache)
+t0 = cache.stats()["traces"]
+a2, b2 = revalue(a, 91), revalue(b, 92)
+p2 = plan_mod.plan_spgemm(a2, b2, mesh=mesh, safety=2.0)
+assert p2.key == p1.key, "serving pair changed the plan key"
+res2 = plan_mod.execute(p2, a2, b2, cache=cache)
+c2 = plan_mod.reassemble(p2, res2)
+err2 = float(np.abs(c2.to_dense() - spgemm_dense_oracle(a2, b2)).max())
+out["cache"] = dict(retraces=cache.stats()["traces"] - t0,
+                    hits=cache.stats()["hits"], err2=err2)
+print(json.dumps(out))
+"""
+
+
+def _run(script: str, timeout: int = 900) -> dict:
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
 
 @pytest.mark.slow
 def test_distributed_spgemm_4dev():
-    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
-    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=600)
-    assert out.returncode == 0, out.stderr[-3000:]
-    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    rec = _run(SCRIPT)
     assert rec["overflow"] == 0
     assert rec["err"] < 1e-3
     assert rec["nnz"] == rec["z"]
     assert rec["imbalance"] < 1.2          # predicted-NNZ balance held
     assert rec["cap"] < rec["ub"]          # beat the upper-bound allocation
+
+
+@pytest.mark.slow
+def test_plan_execute_matches_single_device_on_all_families():
+    rec = _run(PLAN_SCRIPT)
+    for fam in ("er", "pl", "rmat", "band", "fem"):
+        assert rec[fam]["overflow"] == 0, (fam, rec[fam])
+        assert rec[fam]["vdiff"] < 1e-4, (fam, rec[fam])
+        assert rec[fam]["ref_err"] < 1e-3, (fam, rec[fam])
+    assert rec["cache"]["retraces"] == 0, rec["cache"]
+    assert rec["cache"]["hits"] >= 1
+    assert rec["cache"]["err2"] < 1e-3
+
+
+# --------------------------------------------------------------------------- #
+# legacy-path fixes (host-only, no mesh needed)
+# --------------------------------------------------------------------------- #
+def _empty_plan(num_shards=2, rows_per_shard=3):
+    from repro.core import distributed, partition
+    part = partition.balanced_contiguous(np.zeros(0), num_shards)
+    table = np.zeros((num_shards, rows_per_shard), np.int32)
+    valid = np.zeros((num_shards, rows_per_shard), bool)
+    return distributed.DistSpGEMMPlan(table, valid, 8, part, 0.0)
+
+
+def test_reassemble_all_empty_shard_outputs():
+    """No valid rows at all (every shard empty) must reassemble to an empty
+    CSR instead of crashing np.concatenate on an empty list."""
+    from repro.core import distributed
+    plan = _empty_plan()
+    col = np.full((2, 3, 8), np.iinfo(np.int32).max, np.int32)
+    val = np.zeros((2, 3, 8), np.float32)
+    c = distributed.reassemble(plan, col, val, np.zeros((2, 3), np.int32), 4)
+    assert c.nnz == 0 and c.shape == (0, 4)
+
+
+def test_reassemble_surfaces_overflow():
+    from repro.core import distributed, partition
+    part = partition.balanced_contiguous(np.ones(2), 1)
+    plan = distributed.DistSpGEMMPlan(
+        np.array([[0, 1]], np.int32), np.ones((1, 2), bool), 2, part, 4.0)
+    col = np.array([[[0, 1], [2, 3]]], np.int32)
+    val = np.ones((1, 2, 2), np.float32)
+    nnz = np.array([[3, 2]], np.int32)      # row 0 truly has 3 → 1 dropped
+    with pytest.raises(ValueError, match="overflow"):
+        distributed.reassemble(plan, col, val, nnz, 4,
+                               overflow=np.array([1]))
+    # legacy call shape (no overflow arg) and explicit ignore still work
+    c = distributed.reassemble(plan, col, val, nnz, 4)
+    c2 = distributed.reassemble(plan, col, val, nnz, 4,
+                                overflow=np.array([1]),
+                                on_overflow="ignore")
+    assert c.nnz == c2.nnz == 4

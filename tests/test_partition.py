@@ -1,0 +1,112 @@
+"""Property tests for core/partition.py (hypothesis, with the shim fallback).
+
+Pins the degenerate-input behavior the distributed planner leans on:
+``balanced_contiguous`` on all-zero weights / more parts than rows / a single
+row, the ``static_row_assignment`` repeat-last pad contract, and the
+``shard_slices`` bucket∩shard intersection."""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # minimal CI image — deterministic shim
+    from hypothesis_shim import given, settings, st
+
+from repro.core.partition import (balanced_contiguous, shard_slices,
+                                  static_row_assignment)
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+# --------------------------------------------------------------------------- #
+# balanced_contiguous invariants
+# --------------------------------------------------------------------------- #
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=200),
+       st.integers(min_value=1, max_value=16),
+       st.integers(min_value=0, max_value=3))
+def test_balanced_contiguous_invariants(nrows, num_parts, mode):
+    rng = _rng(nrows * 31 + num_parts)
+    if mode == 0:
+        w = np.zeros(nrows)                      # all-zero weights
+    elif mode == 1:
+        w = rng.random(nrows)
+    else:
+        w = rng.integers(0, 5, nrows).astype(float)   # many zero rows
+    part = balanced_contiguous(w, num_parts)
+    bounds = part.bounds
+    assert bounds.shape == (num_parts + 1,)
+    assert bounds[0] == 0 and bounds[-1] == nrows
+    assert (np.diff(bounds) >= 0).all()          # monotone, possibly empty
+    # parts tile the rows exactly and the weights are conserved
+    np.testing.assert_allclose(part.part_weight.sum(), w.sum(),
+                               rtol=1e-9, atol=1e-9)
+    for s in range(num_parts):
+        np.testing.assert_allclose(part.part_weight[s],
+                                   w[bounds[s]:bounds[s + 1]].sum(),
+                                   rtol=1e-9, atol=1e-9)
+    assert part.imbalance >= 1.0 or w.sum() == 0
+
+
+def test_balanced_contiguous_degenerate_pins():
+    # all-zero weights: every row still assigned, imbalance defined
+    part = balanced_contiguous(np.zeros(7), 3)
+    assert part.bounds[-1] == 7 and part.imbalance == 1.0
+    # more parts than rows: trailing parts empty, never negative ranges
+    part = balanced_contiguous(np.ones(2), 5)
+    assert part.bounds[-1] == 2
+    assert (np.diff(part.bounds) >= 0).all()
+    assert int((np.diff(part.bounds) > 0).sum()) <= 2
+    # single row: one part owns it, the rest are empty
+    part = balanced_contiguous(np.array([3.0]), 4)
+    assert part.bounds[-1] == 1
+    assert float(part.part_weight.sum()) == 3.0
+
+
+# --------------------------------------------------------------------------- #
+# static_row_assignment: the repeat-last pad contract
+# --------------------------------------------------------------------------- #
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=120),
+       st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=40))
+def test_static_row_assignment_pad_contract(nrows, num_parts, rows_per_part):
+    rng = _rng(nrows * 13 + num_parts * 7 + rows_per_part)
+    part = balanced_contiguous(rng.random(nrows), num_parts)
+    table = static_row_assignment(part, rows_per_part)
+    assert table.shape == (num_parts, rows_per_part)
+    for s in range(num_parts):
+        lo, hi = int(part.bounds[s]), int(part.bounds[s + 1])
+        n = hi - lo
+        if n == 0:
+            np.testing.assert_array_equal(table[s], 0)
+            continue
+        k = min(n, rows_per_part)
+        np.testing.assert_array_equal(table[s, :k], np.arange(lo, lo + k))
+        # pad slots repeat the LAST row of the range — the contract
+        # pad_row_ids-style executors rely on (a pad row never exceeds the
+        # range's degree envelope, unlike a row-0 fill)
+        np.testing.assert_array_equal(table[s, k:], hi - 1)
+
+
+# --------------------------------------------------------------------------- #
+# shard_slices: bucket∩shard intersection used by the unified planner
+# --------------------------------------------------------------------------- #
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=150),
+       st.integers(min_value=1, max_value=6))
+def test_shard_slices_tile_the_row_list(nrows, num_parts):
+    rng = _rng(nrows * 17 + num_parts)
+    rows = np.sort(rng.choice(max(nrows, 1), size=nrows // 2, replace=False)
+                   ) if nrows else np.zeros(0, np.int64)
+    part = balanced_contiguous(rng.random(nrows), num_parts)
+    lo, hi = shard_slices(rows, part.bounds)
+    assert (hi >= lo).all()
+    pieces = [rows[lo[s]:hi[s]] for s in range(num_parts)]
+    np.testing.assert_array_equal(np.concatenate([np.zeros(0, rows.dtype)]
+                                                 + pieces), rows)
+    for s, piece in enumerate(pieces):
+        if piece.size:
+            assert piece.min() >= part.bounds[s]
+            assert piece.max() < part.bounds[s + 1]
