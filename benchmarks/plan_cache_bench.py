@@ -1,0 +1,243 @@
+"""Plan-cache quantization + overflow re-planning: the serving economics.
+
+Measures, per suite family (ISSUE 4 acceptance):
+
+  * **executor reuse across same-family different-seed pairs** — three
+    tiers.  Without quantization only structure-identical plans share a key
+    (reuse 0%).  With ``pop_quant=True`` the pow2-padded key lets members
+    share whenever their bucket ladders coincide (band does; er/fem flip
+    pow2 bands seed-to-seed; pl/rmat hub degrees are data-unstable) — at a
+    measured ≤2× row padding.  With a ``PlanTemplate`` the family's bucket
+    ladder is frozen and grown monotonically, so EVERY family reaches 100%
+    reuse once the template stops growing (the ``steady`` rate, gated).
+  * **serving reuse** (same structure, new values): must stay 100% / zero
+    retraces with quantization on.
+  * **re-planning overhead**: one under-allocated execute (safety=0, armed
+    retry loop) vs one ample-capacity execute, cold cache both — what the
+    realloc path costs when the prediction misses low.
+
+Standalone::
+
+    PYTHONPATH=src python benchmarks/plan_cache_bench.py [--quick]
+
+Emits ``plancache.*`` CSV rows and writes ``BENCH_plan_cache.json`` at the
+repo root (committed per PR).  ``--quick`` shrinks matrices for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.sparse import random as sprand
+from repro.sparse.formats import CSR
+from repro.core import plan as plan_mod
+
+try:
+    from .common import emit, reset_records, write_bench_json
+except ImportError:   # invoked as a script
+    from common import emit, reset_records, write_bench_json
+
+_LAST: dict = {}
+NPAIRS = 4
+
+
+def _gen(fam: str, m: int, seed: int) -> tuple[CSR, CSR]:
+    if fam == "er":
+        return (sprand.erdos_renyi(m, m, 4, seed=seed),
+                sprand.erdos_renyi(m, m, 3, seed=seed + 50))
+    if fam == "pl":
+        return (sprand.power_law(m, m, 5, 1.5, seed=seed),
+                sprand.power_law(m, m, 4, 1.6, seed=seed + 50))
+    if fam == "rmat":
+        return (sprand.rmat(m, m, 5 * m, seed=seed),
+                sprand.rmat(m, m, 4 * m, seed=seed + 50))
+    if fam == "band":
+        return (sprand.banded(m, m, 12, 16, seed=seed),
+                sprand.banded(m, m, 10, 14, seed=seed + 50))
+    if fam == "fem":
+        return (sprand.banded(m // 2, m // 2, 48, 32, seed=seed),
+                sprand.banded(m // 2, m // 2, 40, 30, seed=seed + 50))
+    raise ValueError(fam)
+
+
+def _revalue(m: CSR, seed: int) -> CSR:
+    rng = np.random.default_rng(seed)
+    return CSR(rpt=m.rpt.copy(), col=m.col.copy(),
+               val=rng.standard_normal(m.nnz).astype(np.float32),
+               shape=m.shape)
+
+
+def _reuse_sweep(fam: str, m: int, pop_quant: bool) -> dict:
+    """Plan+execute NPAIRS different-seed pairs of one family through one
+    cache; count how many of the N-1 follow-up plans reuse an executable."""
+    cache = plan_mod.PlanCache()
+    keys, paddings, slots = [], [], []
+    for k in range(NPAIRS):
+        a, b = _gen(fam, m, seed=1000 + 10 * k)
+        p = plan_mod.plan_spgemm(a, b, safety=1.3, pop_quant=pop_quant)
+        out = plan_mod.execute(p, a, b, cache=cache)
+        assert int(np.asarray(out.row_nnz).sum()) > 0
+        keys.append(p.key)
+        slots.append(int(p.alloc.total_capacity))
+        if pop_quant:
+            paddings.append(p.stats()["row_padding"])
+    st = cache.stats()
+    return dict(
+        reuse_rate=round(st["hits"] / (NPAIRS - 1), 4),
+        hits=st["hits"], misses=st["misses"], traces=st["traces"],
+        distinct_keys=len(set(keys)),
+        mean_slots=int(np.mean(slots)),
+        row_padding=round(float(np.max(paddings)), 4) if paddings else 1.0,
+    )
+
+
+def _template_sweep(fam: str, m: int) -> dict:
+    """Template-planned members: cold pass (template may grow, re-keying
+    later members) then a steady pass over the same pairs — 100% reuse and
+    zero retraces once the family profile has stopped growing."""
+    cache = plan_mod.PlanCache()
+    a0, b0 = _gen(fam, m, seed=1000)
+    tpl = plan_mod.PlanTemplate.from_plan(
+        plan_mod.plan_spgemm(a0, b0, safety=1.3, pop_quant=True))
+    for k in range(NPAIRS):
+        a, b = _gen(fam, m, seed=1000 + 10 * k)
+        p = plan_mod.plan_spgemm(a, b, safety=1.3, template=tpl)
+        plan_mod.execute(p, a, b, cache=cache)
+    cold = cache.stats()
+    paddings = []
+    for k in range(NPAIRS):
+        a, b = _gen(fam, m, seed=1000 + 10 * k)
+        p = plan_mod.plan_spgemm(a, b, safety=1.3, template=tpl)
+        plan_mod.execute(p, a, b, cache=cache)
+        real = max(1, sum(bk.n_rows for bk in p.binning.buckets))
+        paddings.append(sum(p.local_populations()) / real)
+    steady = cache.stats()
+    return dict(
+        cold_reuse=round(cold["hits"] / (NPAIRS - 1), 4),
+        steady_reuse=round((steady["hits"] - cold["hits"]) / NPAIRS, 4),
+        steady_retraces=steady["traces"] - cold["traces"],
+        growths=tpl.growths,
+        executors=steady["size"],
+        row_padding=round(float(np.max(paddings)), 4),
+    )
+
+
+def _serving_sweep(fam: str, m: int) -> dict:
+    """Same structure, new values, quantization ON: 100% reuse, 0 retraces."""
+    cache = plan_mod.PlanCache()
+    a, b = _gen(fam, m, seed=1000)
+    p1 = plan_mod.plan_spgemm(a, b, safety=1.3, pop_quant=True)
+    plan_mod.execute(p1, a, b, cache=cache)
+    t0 = cache.stats()["traces"]
+    a2, b2 = _revalue(a, 91), _revalue(b, 92)
+    p2 = plan_mod.plan_spgemm(a2, b2, safety=1.3, pop_quant=True)
+    plan_mod.execute(p2, a2, b2, cache=cache)
+    return dict(same_key=p2.key == p1.key,
+                retraces=cache.stats()["traces"] - t0,
+                hits=cache.stats()["hits"])
+
+
+def _replan_sweep(fam: str, m: int) -> dict:
+    """Cold-cache one-shot: under-allocated execute (armed retry) vs ample
+    execute — the cost of closing the realloc loop when prediction misses."""
+    a, b = _gen(fam, m, seed=1000)
+
+    p_u = plan_mod.plan_spgemm(a, b, safety=0.0, retry_safety=1.5)
+    t0 = time.perf_counter()
+    out_u = plan_mod.execute(p_u, a, b, cache=plan_mod.PlanCache())
+    t_under = time.perf_counter() - t0
+
+    p_a = plan_mod.plan_spgemm(a, b, safety=1.3, retry_safety=1.5,
+                               sample_rows=p_u.sample_rows)
+    t0 = time.perf_counter()
+    out_a = plan_mod.execute(p_a, a, b, cache=plan_mod.PlanCache())
+    t_ample = time.perf_counter() - t0
+
+    return dict(
+        retry_rounds=p_u.retries,
+        retried_buckets=len(p_u.retry_events),
+        num_buckets=len(p_u.binning.buckets),
+        overflow_after=int(out_u.overflow) + int(out_a.overflow) * 0,
+        retry_us=round(t_under * 1e6, 1),
+        ample_us=round(t_ample * 1e6, 1),
+        retry_premium=round(t_under / max(t_ample, 1e-12), 3),
+        ample_retries=p_a.retries,
+    )
+
+
+def run(quick: bool = False):
+    _LAST.clear()
+    m = 500 if quick else 2000
+    for fam in ("er", "pl", "rmat", "band", "fem"):
+        exact = _reuse_sweep(fam, m, pop_quant=False)
+        quant = _reuse_sweep(fam, m, pop_quant=True)
+        tmpl = _template_sweep(fam, m)
+        serving = _serving_sweep(fam, m)
+        replan = _replan_sweep(fam, m)
+        emit(f"plancache.{fam}.reuse_exact.rate", exact["reuse_rate"] * 100,
+             "same-family different-seed, exact keys")
+        emit(f"plancache.{fam}.reuse_quant.rate", quant["reuse_rate"] * 100,
+             "same-family different-seed, pow2-quantized keys")
+        emit(f"plancache.{fam}.reuse_template.rate",
+             tmpl["steady_reuse"] * 100,
+             "same-family different-seed, template-planned (steady)")
+        emit(f"plancache.{fam}.row_padding.x", quant["row_padding"],
+             "pow2 population pad (≤2 by construction)")
+        emit(f"plancache.{fam}.template_padding.x", tmpl["row_padding"],
+             "template population pad (grown family profile)")
+        emit(f"plancache.{fam}.serving_retraces.n", serving["retraces"],
+             "same structure, new values, quantized")
+        emit(f"plancache.{fam}.retry_premium.x", replan["retry_premium"],
+             "under-allocated+retry vs ample, cold cache")
+        _LAST[fam] = dict(exact=exact, quant=quant, template=tmpl,
+                          serving=serving, replan=replan)
+
+
+def summary() -> dict:
+    return dict(_LAST)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true",
+                   help="CI-sized matrices")
+    args = p.parse_args(argv)
+    reset_records()
+    run(quick=args.quick)
+    out = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "BENCH_plan_cache.json"))
+    write_bench_json(out, extra=dict(plan_cache=summary(), quick=args.quick,
+                                     npairs=NPAIRS))
+    print(json.dumps(summary(), indent=1))
+    print(f"wrote {out}")
+    ok = True
+    for fam, s in summary().items():
+        if s["quant"]["row_padding"] > 2.0:
+            print(f"FAIL: {fam} row padding {s['quant']['row_padding']} > 2x")
+            ok = False
+        if not s["serving"]["same_key"] or s["serving"]["retraces"]:
+            print(f"FAIL: {fam} quantized serving pair retraced")
+            ok = False
+        if s["replan"]["overflow_after"]:
+            print(f"FAIL: {fam} retry loop left overflow")
+            ok = False
+        # every family must reach 100% reuse / zero retraces once its
+        # template stops growing (pow2-key reuse without a template is
+        # reported per family above: it holds only when the seed's bucket
+        # ladder happens to coincide)
+        if s["template"]["steady_reuse"] < 1.0 or \
+                s["template"]["steady_retraces"]:
+            print(f"FAIL: {fam} template steady reuse "
+                  f"{s['template']['steady_reuse']} "
+                  f"({s['template']['steady_retraces']} retraces)")
+            ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,7 +2,9 @@
 sample → predict (binned, routed) → partition on predicted nnz →
 per-bucket-per-shard capacities → binned routed kernels under shard_map —
 plus the signature-keyed plan cache serving a repeated same-structure
-multiply with zero retraces.
+multiply with zero retraces, the pow2-quantized cache key sharing
+executables across same-family matrices, and the overflow re-planning loop
+recovering from a deliberately under-allocated plan (DESIGN §7).
 
 Uses 4 placeholder devices (works on any machine); the same code drives the
 `data` axis of the production mesh.
@@ -60,5 +62,34 @@ assert err2 < 1e-3 and stats["traces"] == traces_before
 print(f"repeat multiply (new values): max err={err2:.2e}, "
       f"cache {stats['hits']} hit(s), {stats['traces'] - traces_before} "
       "retraces")
+
+# quantized plan cache: a same-family matrix pair from DIFFERENT seeds lands
+# on the same pow2-padded plan key and reuses the compiled executables
+a3 = sprand.banded(2000, 2000, 36, 28, seed=11)
+b3 = sprand.banded(2000, 2000, 12, 40, seed=12)
+cache = plan_mod.PlanCache()
+q1 = plan_mod.plan_spgemm(a, b, mesh=mesh, pop_quant=True)
+plan_mod.execute(q1, a, b, cache=cache)
+tq = cache.stats()["traces"]
+q2 = plan_mod.plan_spgemm(a3, b3, mesh=mesh, pop_quant=True)
+c3 = plan_mod.reassemble(q2, plan_mod.execute(q2, a3, b3, cache=cache))
+assert q2.key == q1.key and cache.stats()["traces"] == tq
+print(f"quantized cache, different-seed pair: same key, "
+      f"{cache.stats()['traces'] - tq} retraces, "
+      f"row padding {q2.stats()['row_padding']}x "
+      f"(err {np.abs(c3.to_dense() - spgemm_dense_oracle(a3, b3)).max():.2e})")
+
+# overflow re-planning: plan with NO safety margin — the numeric phase
+# under-allocates, the armed retry loop bumps only the overflowing buckets
+# (pow2-rounded) and re-executes them; the result is still exact
+p_tight = plan_mod.plan_spgemm(a, b, mesh=mesh, safety=0.0, retry_safety=1.5)
+res = plan_mod.execute(p_tight, a, b)
+c4 = plan_mod.reassemble(p_tight, res)
+err4 = np.abs(c4.to_dense() - spgemm_dense_oracle(a, b)).max()
+assert err4 < 1e-3 and int(res.shard_overflow.sum()) == 0
+print(f"re-planning loop: {p_tight.retries} round(s), "
+      f"{len(p_tight.retry_events)} bucket(s) bumped to "
+      f"{[t.capacity for t in p_tight.shard_tables]} slots, max err={err4:.2e}")
 print("OK — sharded SpGEMM exact, balanced, within predicted buffers, "
-      "cache-served.")
+      "cache-served; quantized keys shared across seeds; overflow healed "
+      "by re-planning.")

@@ -32,9 +32,14 @@ Compile-cache contract: the device executors are ``jax.jit``-cached on the
 bucket's static shapes — ``RowBucket.signature`` (= the static argnames)
 *plus* the traced shapes, of which the bucket's row count is the one that
 varies.  Two plans share a bucket's compiled program iff the signature AND
-the bucket population match (padding populations to coarser sizes to raise
-hit rates is a possible future knob); ``BinningPlan.signatures()`` exposes
-the static part so callers (and tests) can check signature-level overlap.
+the bucket population match.  Padding populations to coarser sizes to raise
+hit rates is the **population-quantization knob**, wired through
+``plan_spgemm(pop_quant=True)`` (``core.plan``): bucket populations (and
+distributed ``rows_pb``) are pow2-padded, degree bounds pow2-rounded
+(:data:`POW2_DEG_ALIGN`) and capacities pow2-rounded, so *same-family,
+different-seed* matrices land on the same plan key at ≤2× row padding;
+``BinningPlan.signatures()`` exposes the static part so callers (and tests)
+can check signature-level overlap.
 """
 from __future__ import annotations
 
@@ -55,6 +60,11 @@ ROUTE_SPA = "spa"
 ROUTES = (ROUTE_ESC, ROUTE_SPA)
 
 SPA_MIN_TILE = 128              # one VPU lane row — never tile finer
+
+# ``round_deg`` align sentinel: any align ≥ the degree collapses the rule to
+# pure pow2 rounding (``d <= align`` branch) — the degree-bound half of the
+# population-quantization knob (``plan_spgemm(pop_quant=True)``).
+POW2_DEG_ALIGN = 1 << 60
 DEFAULT_SPA_MIN_BLOCK_ROWS = 64  # auto-route gate: dense tiles need tall
                                  # blocks to amortize the per-tile touch
 

@@ -8,9 +8,15 @@ and for API compatibility; new code should use the unified planner/executor
 in :mod:`repro.core.plan` (DESIGN.md §6), which runs each shard through the
 binned routed kernels with per-bucket-per-shard capacities::
 
-    plan = plan_spgemm(a, b, mesh=mesh)
+    plan = plan_spgemm(a, b, mesh=mesh,
+                       pop_quant=True,      # pow2-quantized plan-cache keys
+                       retry_safety=1.5)    # overflow re-planning loop
     out  = execute(plan, a, b)        # DistSpgemmOut, per-shard overflow
     c    = reassemble(plan, out)
+
+(This legacy path only *surfaces* overflow through ``reassemble``; the
+unified pipeline's armed retry loop re-executes the overflowing buckets
+instead — DESIGN.md §7.)
 
 The original paper pipeline at pod scale (DESIGN §3/§4):
 

@@ -28,6 +28,32 @@ scenario — look up the same jitted executable and run with ZERO retraces
 (``PlanCache.stats()["traces"]`` is pinned by ``tests/test_plan.py`` /
 ``tests/test_distributed.py``).
 
+**Population quantization** (``plan_spgemm(pop_quant=True)``, DESIGN.md §7).
+The exact-population key above limits guaranteed reuse to structure-identical
+pairs.  The quantization knob pow2-pads every varying shape in the key —
+bucket populations (local row tables ride with a validity mask; distributed
+``rows_pb`` pads its shard tables), degree bounds
+(``binning.POW2_DEG_ALIGN``) and predicted capacities — so *same-family,
+different-seed* matrices share executables at ≤2× row padding (hit rates
+measured in ``benchmarks/plan_cache_bench.py`` → ``BENCH_plan_cache.json``).
+:class:`PlanTemplate` goes further: it freezes one quantized plan's bucket
+ladder as the family-level compile contract and grows it monotonically
+(pow2, in place), so EVERY member planned after the last growth shares one
+executor — 100% steady-state reuse on all suite families (bench-gated).
+
+**Overflow re-planning** (``plan_spgemm(retry_safety=...)``, DESIGN.md §7).
+The numeric kernels report each row's TRUE nnz even when its bucket's
+capacity truncates the output, so after the numeric phase :func:`execute`
+detects per-bucket (and per-shard) overflow host-side, bumps ONLY the
+overflowing buckets' capacities (``×retry_safety^n``, pow2-rounded, floored
+at the observed need) and re-executes just those buckets through cached
+per-bucket executors, splicing the results back — the compiled-program
+analogue of realloc, closing the paper's predict→allocate loop end to end.
+Retry counts and final capacities are surfaced on the plan
+(``plan.retries`` / ``plan.retry_events`` / ``plan.stats()``); the
+no-overflow fast path costs one host readback of ``row_nnz`` and ZERO
+retraces.
+
 Public API::
 
     plan = plan_spgemm(a, b)                    # single device
@@ -143,6 +169,12 @@ class SpgemmPlan:
     cap_b: int
     safety: float
     use_kernel: bool
+    # plan-cache quantization + overflow re-planning (DESIGN.md §7)
+    pop_quant: bool = False         # pow2-padded populations/degrees/caps
+    retry_safety: float = 0.0       # 0 → replanning off; else capacity bump/round
+    max_retries: int = 4
+    retries: int = 0                # rounds the last execute() needed
+    retry_events: list = dataclasses.field(default_factory=list)  # last execute()
     # distributed-only (num_shards == 0 → single device)
     num_shards: int = 0
     axis: str = "data"
@@ -150,6 +182,8 @@ class SpgemmPlan:
     shard_tables: tuple[BucketShardTable, ...] = ()
     shard_capacities: np.ndarray | None = None  # (buckets, shards) per-shard need
     mesh: object = None             # not part of the key (see _mesh_key)
+    _template: object = None        # PlanTemplate this plan was fit against
+    _pop_override: tuple | None = dataclasses.field(default=None, repr=False)
     _device_args: tuple | None = dataclasses.field(default=None, repr=False)
     # ((host_a, host_b), (ad, bd)) from planning — execute() on the planned
     # operands reuses the prediction pass's upload instead of a second H2D
@@ -159,12 +193,46 @@ class SpgemmPlan:
     def distributed(self) -> bool:
         return self.num_shards > 0
 
+    def local_populations(self) -> tuple[int, ...]:
+        """Per-bucket traced row counts of the local executor — the exact
+        populations, their pow2 pads under ``pop_quant``, or the template's
+        grown pads when planned against one."""
+        if self._pop_override is not None:
+            return self._pop_override
+        if self.pop_quant:
+            return tuple(binning_mod.ceil_pow2(bk.n_rows)
+                         for bk in self.binning.buckets)
+        return tuple(bk.n_rows for bk in self.binning.buckets)
+
     def device_args(self) -> tuple:
-        """Executor row-table args (+ inverse perm for local plans), uploaded
-        once per plan — the cache-served serving path pays pure dispatch."""
+        """Executor row-table args (+ inverse perm for local plans; + validity
+        masks under ``pop_quant``), uploaded once per plan — the cache-served
+        serving path pays pure dispatch."""
         if self._device_args is None:
             if self.distributed:
                 args = tuple(jnp.asarray(t.table) for t in self.shard_tables)
+            elif self.pop_quant:
+                # pow2-padded bucket tables (repeat-last fill) + validity
+                # masks; the inverse perm indexes the PADDED concatenation so
+                # assembly drops pad rows for free
+                pops = self.local_populations()
+                tables, masks, pos = [], [], []
+                off = 0
+                for bk, pop in zip(self.binning.buckets, pops):
+                    ids = np.empty(pop, dtype=np.int32)
+                    ids[:bk.n_rows] = bk.rows
+                    ids[bk.n_rows:] = bk.rows[-1] if bk.n_rows else 0
+                    tables.append(jnp.asarray(ids))
+                    mask = np.zeros(pop, dtype=bool)
+                    mask[:bk.n_rows] = True
+                    masks.append(jnp.asarray(mask))
+                    pos.append(off + np.arange(bk.n_rows, dtype=np.int64))
+                    off += pop
+                pos = (np.concatenate(pos) if pos
+                       else np.zeros(0, dtype=np.int64))
+                perm = jnp.asarray(
+                    pos[self.binning.inverse_perm()].astype(np.int32))
+                args = (perm,) + tuple(masks) + tuple(tables)
             else:
                 perm = jnp.asarray(
                     self.binning.inverse_perm().astype(np.int32))
@@ -183,11 +251,13 @@ class SpgemmPlan:
                 for bk, t in zip(self.binning.buckets, self.shard_tables))
         else:
             buckets = tuple(
-                (bk.signature, bk.n_rows, int(cap))
-                for bk, cap in zip(self.binning.buckets,
-                                   self.alloc.bucket_capacities))
+                (bk.signature, pop, int(cap))
+                for bk, pop, cap in zip(self.binning.buckets,
+                                        self.local_populations(),
+                                        self.alloc.bucket_capacities))
         return ("spgemm-plan", self.num_shards, self.axis, self.use_kernel,
-                self.shape_a, self.shape_b, self.cap_a, self.cap_b,
+                self.pop_quant, self.shape_a, self.shape_b,
+                self.cap_a, self.cap_b,
                 self.alloc.row_capacity, buckets)
 
     def shard_slots(self) -> int:
@@ -227,6 +297,20 @@ class SpgemmPlan:
                 bucket_rows_per_shard=[t.rows_pb for t in self.shard_tables],
                 shard_bucket_capacities=[t.capacity for t in self.shard_tables],
             )
+        if self.pop_quant:
+            real = max(1, sum(bk.n_rows for bk in self.binning.buckets))
+            out.update(pop_quant=True,
+                       row_padding=round(sum(self.local_populations()) / real, 4))
+        if self.retry_safety > 0:
+            out.update(
+                retry_safety=self.retry_safety,
+                retries=self.retries,
+                retry_events=list(self.retry_events),
+                final_capacities=(
+                    [t.capacity for t in self.shard_tables]
+                    if self.distributed else
+                    list(self.alloc.bucket_capacities)),
+            )
         return out
 
 
@@ -237,6 +321,183 @@ class DistSpgemmOut(NamedTuple):
     vals: tuple        # per bucket: (num_shards, rows_pb, cap_b) float32
     row_nnz: tuple     # per bucket: (num_shards, rows_pb) int32 — true nnz
     shard_overflow: np.ndarray   # (num_shards,) int64 — valid rows only
+
+
+# --------------------------------------------------------------------------- #
+# Plan templates — the family-level compile contract (DESIGN.md §7).
+#
+# Per-component pow2 rounding cannot make two matrices share a key when the
+# bucket LADDER itself differs (a width band present in one seed's histogram
+# and absent in the other's, or a hub degree crossing a pow2 boundary).  A
+# template freezes one quantized plan's static half — bucket signatures,
+# padded populations, capacities, device-CSR caps — and other same-shape
+# matrices plan AGAINST it: rows are assigned to the first template bucket
+# whose degree bounds dominate them, populations/capacities grow (pow2,
+# monotone, in place) only when a member exceeds the template, and every
+# member planned after the last growth lands on the SAME plan key.
+# --------------------------------------------------------------------------- #
+class PlanTemplate:
+    """Mutable static execution profile shared by a family of matrices.
+
+    Build from a representative plan, then pass to
+    ``plan_spgemm(template=...)``::
+
+        tpl = PlanTemplate.from_plan(plan_spgemm(a0, b0, pop_quant=True))
+        p1  = plan_spgemm(a1, b1, template=tpl)   # same key as a0·b0's plan
+                                                  # unless a1/b1 outgrow it
+
+    Growth events (``tpl.growths``) re-key subsequent plans once; members
+    planned after the last growth all share executables.
+    """
+
+    def __init__(self, shape_a, shape_b, cap_a, cap_b, use_kernel, safety,
+                 sigs, pops, caps):
+        self.shape_a = tuple(shape_a)
+        self.shape_b = tuple(shape_b)
+        self.cap_a = int(cap_a)
+        self.cap_b = int(cap_b)
+        self.use_kernel = bool(use_kernel)
+        self.safety = float(safety)
+        self.sigs = list(sigs)      # per-bucket RowBucket.signature tuples
+        self.pops = list(pops)      # pow2 padded populations
+        self.caps = list(caps)      # pow2 row capacities
+        self.growths = 0
+
+    @staticmethod
+    def from_plan(plan: "SpgemmPlan") -> "PlanTemplate":
+        if not plan.pop_quant:
+            raise ValueError("templates require a pop_quant=True plan")
+        if plan.distributed:
+            raise ValueError("build templates from a single-device plan; "
+                             "pass mesh to plan_spgemm(template=...) instead")
+        return PlanTemplate(
+            plan.shape_a, plan.shape_b, plan.cap_a, plan.cap_b,
+            plan.use_kernel, plan.safety,
+            sigs=[bk.signature for bk in plan.binning.buckets],
+            pops=list(plan.local_populations()),
+            caps=list(plan.alloc.bucket_capacities))
+
+    def _grow_sig(self, i: int, da: int, db: int, span: int,
+                  lane_budget: int = binning_mod.DEFAULT_LANE_BUDGET) -> None:
+        """Raise bucket ``i``'s static bounds to dominate (da, db, span)."""
+        da0, db0, _, route, _, span0 = self.sigs[i]
+        da = max(da0, binning_mod.ceil_pow2(da))
+        db = max(db0, binning_mod.ceil_pow2(db))
+        span = max(span0, binning_mod.ceil_pow2(span))
+        blk = binning_mod._pick_block_rows(da * db, lane_budget,
+                                           binning_mod.DEFAULT_MAX_BLOCK_ROWS)
+        if route == binning_mod.ROUTE_SPA:
+            tile, _ = binning_mod.spa_tile(span, lane_budget)
+            blk = int(max(1, min(blk, binning_mod.floor_pow2(
+                max(1, lane_budget // tile)))))
+            self.sigs[i] = (da, db, blk, route, tile, span)
+        else:
+            self.sigs[i] = (da, db, blk, route, 0, 0)
+        self.growths += 1
+
+    def assign(self, deg_a: np.ndarray, dbmax: np.ndarray,
+               spans: np.ndarray | None) -> np.ndarray:
+        """Row → bucket index under degree-bound dominance (first/narrowest
+        dominating bucket wins; -1 when no bucket covers the row)."""
+        m = deg_a.size
+        out = np.full(m, -1, dtype=np.int32)
+        for i, (da, db, _blk, route, _tile, span) in enumerate(self.sigs):
+            ok = (out < 0) & (deg_a <= da) & (dbmax <= db)
+            if route == binning_mod.ROUTE_SPA and spans is not None:
+                ok &= spans <= span
+            out[ok] = i
+        return out
+
+    def fit(self, a, b) -> "binning_mod.BinningPlan":
+        """Assign every row of ``a·b`` to a template bucket, growing the
+        template (monotone, pow2) where the member exceeds it, and return
+        the member's :class:`~repro.core.binning.BinningPlan` carrying the
+        template's static bounds."""
+        if a.shape != self.shape_a or b.shape != self.shape_b:
+            raise ValueError(f"member shapes {a.shape}/{b.shape} do not "
+                             f"match template {self.shape_a}/{self.shape_b}")
+        a_rpt = np.asarray(a.rpt)
+        a_col = np.asarray(a.col)
+        b_rpt = np.asarray(b.rpt)
+        rownnz_b = np.diff(b_rpt.astype(np.int64))
+        deg_a, dbmax, _width = binning_mod.row_widths(a_rpt, a_col, rownnz_b)
+        need_spans = any(s[3] == binning_mod.ROUTE_SPA for s in self.sigs)
+        spans = (binning_mod.row_spans(a_rpt, a_col, b_rpt,
+                                       np.asarray(b.col))
+                 if need_spans else None)
+        which = self.assign(deg_a, dbmax, spans)
+        if (which < 0).any():
+            # grow the widest bucket to cover the escapees, then re-assign
+            left = which < 0
+            self._grow_sig(len(self.sigs) - 1,
+                           int(deg_a[left].max(initial=1)),
+                           int(dbmax[left].max(initial=1)),
+                           int(spans[left].max(initial=1))
+                           if spans is not None else 1)
+            which = self.assign(deg_a, dbmax, spans)
+            assert (which >= 0).all()
+        buckets = []
+        row_bucket = np.zeros(deg_a.size, dtype=np.int32)
+        for i, sig in enumerate(self.sigs):
+            ids = np.ascontiguousarray(
+                np.flatnonzero(which == i).astype(np.int32))
+            da, db, blk, route, tile, span = sig
+            n_tiles = (-(-binning_mod.ceil_pow2(max(1, span)) // tile)
+                       if route == binning_mod.ROUTE_SPA and tile else 0)
+            buckets.append(binning_mod.RowBucket(
+                rows=ids, deg_a=da, deg_b=db, block_rows=blk, route=route,
+                tile_n=tile, n_tiles=n_tiles, span=span))
+            row_bucket[ids] = i
+            if ids.size > self.pops[i]:
+                self.pops[i] = binning_mod.ceil_pow2(ids.size)
+                self.growths += 1
+        gda = int(deg_a.max()) if deg_a.size else 1
+        gdb = int(rownnz_b.max()) if rownnz_b.size else 1
+        return binning_mod.BinningPlan(
+            buckets=tuple(buckets), nrows=deg_a.size,
+            global_deg_a=max(1, gda), global_deg_b=max(1, gdb),
+            row_bucket=row_bucket)
+
+    def grow_caps(self, member_caps) -> None:
+        for i, c in enumerate(member_caps):
+            if int(c) > self.caps[i]:
+                self.caps[i] = binning_mod.ceil_pow2(int(c))
+                self.growths += 1
+
+    def dist_profile(self, num_shards: int) -> dict:
+        """Per-mesh-size static shard profile: pow2 ``rows_pb`` and per-shard
+        capacities per bucket, grown monotonically like the local half
+        (first use seeds from the member without counting growth)."""
+        if not hasattr(self, "_dist"):
+            self._dist = {}
+        return self._dist.setdefault(
+            int(num_shards), dict(rows_pb=[0] * len(self.sigs),
+                                  caps=[0] * len(self.sigs)))
+
+    def grow_dist(self, num_shards: int, rows_pb, caps) -> tuple[list, list]:
+        d = self.dist_profile(num_shards)
+        fresh = not any(d["rows_pb"])
+        for i, (r, c) in enumerate(zip(rows_pb, caps)):
+            if int(r) > d["rows_pb"][i]:
+                d["rows_pb"][i] = binning_mod.ceil_pow2(int(r))
+                self.growths += 0 if fresh else 1
+            if int(c) > d["caps"][i]:
+                d["caps"][i] = binning_mod.ceil_pow2(int(c))
+                self.growths += 0 if fresh else 1
+        return list(d["rows_pb"]), list(d["caps"])
+
+    def grow_device_caps(self, nnz_a: int, nnz_b: int) -> None:
+        if nnz_a > self.cap_a:
+            self.cap_a = _device_capacity(nnz_a)
+            self.growths += 1
+        if nnz_b > self.cap_b:
+            self.cap_b = _device_capacity(nnz_b)
+            self.growths += 1
+
+    def stats(self) -> dict:
+        return dict(buckets=len(self.sigs), sigs=[list(s) for s in self.sigs],
+                    pops=list(self.pops), caps=list(self.caps),
+                    cap_a=self.cap_a, cap_b=self.cap_b, growths=self.growths)
 
 
 # --------------------------------------------------------------------------- #
@@ -262,14 +523,25 @@ def _executor_key(plan: SpgemmPlan, mesh) -> tuple:
 
 def _build_shard_tables(binplan: binning_mod.BinningPlan,
                         partn: part_mod.Partition,
-                        static_caps) -> tuple[BucketShardTable, ...]:
+                        static_caps,
+                        pow2_rows: bool = False,
+                        rows_pb_list=None,
+                        slices=None) -> tuple[BucketShardTable, ...]:
     bounds = np.asarray(partn.bounds)
     num_shards = partn.num_parts
     tables = []
-    for bucket, cap in zip(binplan.buckets, static_caps):
-        lo, hi = part_mod.shard_slices(bucket.rows, bounds)
+    for i, (bucket, cap) in enumerate(zip(binplan.buckets, static_caps)):
+        lo, hi = (slices[i] if slices is not None
+                  else part_mod.shard_slices(bucket.rows, bounds))
         counts = hi - lo
         rows_pb = int(max(1, counts.max())) if counts.size else 1
+        if pow2_rows:
+            # population quantization: pad rows_pb so same-family
+            # different-seed plans share the shard executor's traced shapes
+            rows_pb = binning_mod.ceil_pow2(rows_pb)
+        if rows_pb_list is not None:
+            # template profile: the family's grown rows_pb dominates
+            rows_pb = max(rows_pb, int(rows_pb_list[i]))
         table = np.empty((num_shards, rows_pb), dtype=np.int32)
         valid = np.zeros((num_shards, rows_pb), dtype=bool)
         for s in range(num_shards):
@@ -280,8 +552,9 @@ def _build_shard_tables(binplan: binning_mod.BinningPlan,
                 table[s, n:] = ids[-1]
             else:
                 # shard owns no rows of this bucket: pad with any bucket row
-                # (stays inside the bucket's degree envelope; discarded)
-                table[s, :] = bucket.rows[0]
+                # (stays inside the bucket's degree envelope; discarded) —
+                # row 0 for a bucket emptied under a template
+                table[s, :] = bucket.rows[0] if bucket.n_rows else 0
             valid[s, :n] = True
         tables.append(BucketShardTable(table=table, valid=valid,
                                        capacity=int(cap)))
@@ -293,7 +566,10 @@ def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
                 route: str = "auto", use_kernel: bool = False,
                 sample_rows: np.ndarray | None = None,
                 min_rows: int = binning_mod.DEFAULT_MIN_ROWS,
-                deg_align: int = 1) -> SpgemmPlan:
+                deg_align: int = 1, pop_quant: bool = False,
+                retry_safety: float = 0.0,
+                max_retries: int = 4,
+                template: PlanTemplate | None = None) -> SpgemmPlan:
     """Plan ``C = A·B``: sample → predict (binned, routed) → partition on
     predicted nnz → per-bucket(-per-shard) capacities.
 
@@ -301,18 +577,41 @@ def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
     alone plans without devices — useful for planning-time analysis; a mesh
     can then be supplied to :func:`execute`).  ``a``/``b`` are host ``CSR``;
     planning is a launch-time host step like ``core.partition``.
+
+    ``pop_quant`` turns on plan-cache quantization: pow2-padded bucket
+    populations / distributed ``rows_pb``, pow2 degree bounds and pow2
+    capacities, so same-family different-seed matrices share executables at
+    ≤2× row padding.  ``retry_safety`` > 0 arms the overflow re-planning
+    loop in :func:`execute` (``×retry_safety^n`` pow2-rounded capacity bumps,
+    only overflowing buckets re-execute, ≤ ``max_retries`` rounds).
+    ``template`` (implies ``pop_quant``) plans against a
+    :class:`PlanTemplate`'s frozen bucket ladder instead of the member's own
+    width histogram — the strongest sharing: every member planned after the
+    template's last growth lands on the SAME plan key.
     """
     assert a.ncols == b.nrows, (a.shape, b.shape)
-    binplan = binning_mod.build_plan(a, b, route=route, min_rows=min_rows,
-                                     deg_align=deg_align)
+    if template is not None:
+        pop_quant = True
+        template.grow_device_caps(a.nnz, b.nnz)
+        binplan = template.fit(a, b)
+    else:
+        if pop_quant and deg_align <= 1:
+            # quantized plans need quantized degree bounds, or the per-bucket
+            # signatures (exact degree maxima) would fragment the key anyway
+            deg_align = binning_mod.POW2_DEG_ALIGN
+        binplan = binning_mod.build_plan(a, b, route=route, min_rows=min_rows,
+                                         deg_align=deg_align)
     flopr, total_flop = oracle.flop_per_row(a, b)
     if sample_rows is None:
         sample_rows = (oracle.sample_rows(a.nrows, seed) if a.nrows
                        else np.zeros(0, dtype=np.int64))
     sample_rows = np.asarray(sample_rows, dtype=np.int64)
 
-    cap_a = _device_capacity(a.nnz)
-    cap_b = _device_capacity(b.nnz)
+    if template is not None:
+        cap_a, cap_b = template.cap_a, template.cap_b
+    else:
+        cap_a = _device_capacity(a.nnz)
+        cap_b = _device_capacity(b.nnz)
     devpair = None
     if total_flop > 0 and sample_rows.size:
         ad = csr_mod.to_device(a, capacity=cap_a)
@@ -337,13 +636,28 @@ def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
         cr = 1.0
 
     alloc = predictor_mod.BinnedAllocationPlan.from_prediction(
-        binplan, structure, flopr, safety=safety)
+        binplan, structure, flopr, safety=safety, pow2=pop_quant)
+    if template is not None:
+        # the family's grown capacities dominate the member's prediction
+        template.grow_caps(alloc.bucket_capacities)
+        caps = tuple(template.caps)
+        alloc = predictor_mod.BinnedAllocationPlan(
+            bucket_capacities=caps,
+            row_capacity=max(caps) if caps else 8,
+            total_capacity=sum(bk.n_rows * c
+                               for bk, c in zip(binplan.buckets, caps)),
+            safety=safety)
 
     plan = SpgemmPlan(
         binning=binplan, alloc=alloc, structure=structure, flopr=flopr,
         predicted_nnz=predicted_nnz, compression_ratio=cr,
         sample_rows=sample_rows, shape_a=a.shape, shape_b=b.shape,
-        cap_a=cap_a, cap_b=cap_b, safety=safety, use_kernel=use_kernel)
+        cap_a=cap_a, cap_b=cap_b, safety=safety, use_kernel=use_kernel,
+        pop_quant=pop_quant, retry_safety=retry_safety,
+        max_retries=max_retries)
+    if template is not None:
+        plan._template = template
+        plan._pop_override = tuple(template.pops)
     if devpair is not None:
         plan._planned_pair = ((a, b), devpair)
 
@@ -351,11 +665,29 @@ def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
         shards = int(num_shards if num_shards else mesh.shape[axis])
         partn = part_mod.balanced_contiguous(structure, shards)
         caps_mat, static_caps = predictor_mod.shard_bucket_capacities(
-            binplan, structure, flopr, partn.bounds, safety=safety)
+            binplan, structure, flopr, partn.bounds, safety=safety,
+            pow2=pop_quant)
+        rows_pb_list = slices = None
+        if template is not None:
+            # member per-bucket rows_pb (pow2) → grow the family profile,
+            # then pad every table to the grown profile (the shard slices
+            # are computed once and reused for the table fill)
+            slices = [part_mod.shard_slices(bucket.rows, partn.bounds)
+                      for bucket in binplan.buckets]
+            member_pb = []
+            for lo, hi in slices:
+                counts = hi - lo
+                member_pb.append(binning_mod.ceil_pow2(
+                    int(max(1, counts.max())) if counts.size else 1))
+            rows_pb_list, static_caps = template.grow_dist(
+                shards, member_pb, static_caps)
         plan.num_shards = shards
         plan.axis = axis
         plan.partition = partn
-        plan.shard_tables = _build_shard_tables(binplan, partn, static_caps)
+        plan.shard_tables = _build_shard_tables(binplan, partn, static_caps,
+                                                pow2_rows=pop_quant,
+                                                rows_pb_list=rows_pb_list,
+                                                slices=slices)
         plan.shard_capacities = caps_mat
         plan.mesh = mesh
     return plan
@@ -380,19 +712,29 @@ def _run_bucket(ad: CSRDevice, bd: CSRDevice, rows: jax.Array, meta: tuple,
 
 
 def _build_local_executor(metas: tuple, cap_out: int, use_kernel: bool,
-                          cache: PlanCache):
+                          cache: PlanCache, masked: bool = False):
     """Single-device executor: per-bucket routed passes + one concat/perm
     assembly — the :func:`repro.core.spgemm.spgemm_binned` dataflow inside
     one cached jit (row ids and the inverse permutation stay traced so the
-    compiled program serves every same-keyed plan)."""
+    compiled program serves every same-keyed plan).
+
+    ``masked`` is the pop-quant variant: bucket tables arrive pow2-padded
+    with validity masks; pad rows (repeat-last fill) are excluded from the
+    overflow count and never selected by the padded-layout ``perm``.
+    """
+    nb = len(metas)
 
     @jax.jit
-    def run(ad, bd, perm, *tables):
+    def run(ad, bd, perm, *rest):
         cache._note_trace()
+        masks = rest[:nb] if masked else (None,) * nb
+        tables = rest[nb:] if masked else rest
         parts_c, parts_v, parts_n = [], [], []
         overflow = jnp.int32(0)
-        for meta, rows in zip(metas, tables):
+        for meta, rows, mask in zip(metas, tables, masks):
             c, v, n, of = _run_bucket(ad, bd, rows, meta, use_kernel)
+            if masked:
+                of = jnp.where(mask, jnp.maximum(n - meta[-1], 0), 0).sum()
             c, v = pad_to_capacity(c, v, cap_out)
             parts_c.append(c)
             parts_v.append(v)
@@ -404,6 +746,35 @@ def _build_local_executor(metas: tuple, cap_out: int, use_kernel: bool,
                          overflow)
 
     return run
+
+
+def _build_bucket_executor(meta: tuple, use_kernel: bool, cache: PlanCache):
+    """One bucket's standalone executor — the re-planning loop's unit of
+    re-execution (trace-counted like the full executors)."""
+
+    @jax.jit
+    def run(ad, bd, rows):
+        cache._note_trace()
+        return _run_bucket(ad, bd, rows, meta, use_kernel)
+
+    return run
+
+
+def _build_bucket_dist_executor(meta: tuple, mesh, axis: str,
+                                use_kernel: bool, cache: PlanCache):
+    """One bucket's shard_map executor — the distributed re-planning unit."""
+
+    def shard_fn(ad, bd, table):
+        cache._note_trace()
+        c, v, n, _ = _run_bucket(ad, bd, table[0], meta, use_kernel)
+        return c[None], v[None], n.astype(jnp.int32)[None]
+
+    fn = shard_map(shard_fn, mesh=mesh,
+                   in_specs=(P(), P(), P(axis, None)),
+                   out_specs=(P(axis, None, None), P(axis, None, None),
+                              P(axis, None)),
+                   check_rep=False)
+    return jax.jit(fn)
 
 
 def _build_dist_executor(metas: tuple, mesh, axis: str, use_kernel: bool,
@@ -454,6 +825,131 @@ def _coerce_pair(plan: SpgemmPlan, a, b) -> tuple[CSRDevice, CSRDevice]:
     return one(a, "a", 0), one(b, "b", 1)
 
 
+# --------------------------------------------------------------------------- #
+# Overflow re-planning (DESIGN.md §7): bump ONLY the overflowing buckets'
+# capacities and re-execute them — the realloc half of the paper's story.
+# --------------------------------------------------------------------------- #
+def _bumped_capacity(cap: int, need: int, retry_safety: float,
+                     attempt: int) -> int:
+    """Safety-factor schedule ``×retry_safety^attempt``, floored at the
+    observed need (``row_nnz`` is exact, so one round converges) and
+    pow2-rounded so retry capacities stay cache-quantized."""
+    sched = int(np.ceil(cap * (retry_safety ** attempt)))
+    return binning_mod.ceil_pow2(max(need, sched, cap + 1))
+
+
+def _replan_local(plan: SpgemmPlan, ad, bd, out: SpGEMMOut,
+                  cache: PlanCache) -> SpGEMMOut:
+    buckets = plan.binning.buckets
+    caps = list(plan.alloc.bucket_capacities)
+    n = np.asarray(out.row_nnz, dtype=np.int64)
+    col = val = None                   # materialized on first splice only
+    args = plan.device_args()
+    tables = args[1 + len(buckets):] if plan.pop_quant else args[1:]
+    plan.retries = 0
+    plan.retry_events = []             # observability covers the LAST execute
+    for attempt in range(1, plan.max_retries + 1):
+        over = [i for i, bk in enumerate(buckets)
+                if bk.n_rows and int(n[bk.rows].max()) > caps[i]]
+        if not over:
+            break
+        if col is None:
+            col = np.asarray(out.col).copy()
+            val = np.asarray(out.val).copy()
+        plan.retries = attempt
+        for i in over:
+            bk = buckets[i]
+            need = int(n[bk.rows].max())
+            new_cap = _bumped_capacity(caps[i], need, plan.retry_safety,
+                                       attempt)
+            meta = _bucket_meta(bk, new_cap)
+            pop = int(tables[i].shape[0])
+            run = cache.executor(
+                ("bucket-retry", plan.shape_a, plan.shape_b, plan.cap_a,
+                 plan.cap_b, plan.use_kernel, meta, pop),
+                lambda m=meta: _build_bucket_executor(m, plan.use_kernel,
+                                                     cache))
+            c2, v2, _, _ = run(ad, bd, tables[i])
+            c2 = np.asarray(c2)[:bk.n_rows]
+            v2 = np.asarray(v2)[:bk.n_rows]
+            if new_cap > col.shape[1]:
+                grow = new_cap - col.shape[1]
+                col = np.concatenate(
+                    [col, np.full((col.shape[0], grow), COL_SENTINEL,
+                                  np.int32)], axis=1)
+                val = np.concatenate(
+                    [val, np.zeros((val.shape[0], grow), np.float32)], axis=1)
+            col[bk.rows, :new_cap] = c2
+            val[bk.rows, :new_cap] = v2
+            plan.retry_events.append(dict(
+                round=attempt, bucket=i, old_cap=caps[i], new_cap=new_cap,
+                need=need))
+            caps[i] = new_cap
+    if col is None:
+        return out                     # fast path: nothing overflowed
+    # final capacities + overflow recomputed against the bumped plan
+    capv = np.zeros(n.shape[0], dtype=np.int64)
+    for bk, cap in zip(buckets, caps):
+        capv[bk.rows] = cap
+    overflow = int(np.maximum(n - capv, 0).sum())
+    plan.alloc = predictor_mod.BinnedAllocationPlan(
+        bucket_capacities=tuple(caps), row_capacity=max(caps),
+        total_capacity=sum(bk.n_rows * c for bk, c in zip(buckets, caps)),
+        safety=plan.alloc.safety)
+    if plan._template is not None:
+        plan._template.grow_caps(caps)   # the family learns from the miss
+    return SpGEMMOut(jnp.asarray(col), jnp.asarray(val), out.row_nnz,
+                     jnp.int32(overflow))
+
+
+def _replan_dist(plan: SpgemmPlan, ad, bd, out: DistSpgemmOut,
+                 cache: PlanCache, mesh) -> DistSpgemmOut:
+    buckets = plan.binning.buckets
+    tables = list(plan.shard_tables)
+    nnzs = [np.asarray(x, dtype=np.int64) for x in out.row_nnz]
+    cols, vals = list(out.cols), list(out.vals)
+    args = plan.device_args()
+    plan.retries = 0
+    plan.retry_events = []             # observability covers the LAST execute
+    for attempt in range(1, plan.max_retries + 1):
+        over = [i for i, t in enumerate(tables)
+                if int(np.where(t.valid, nnzs[i], 0).max(initial=0))
+                > t.capacity]
+        if not over:
+            break
+        plan.retries = attempt
+        for i in over:
+            t = tables[i]
+            need = int(np.where(t.valid, nnzs[i], 0).max())
+            new_cap = _bumped_capacity(t.capacity, need, plan.retry_safety,
+                                       attempt)
+            meta = _bucket_meta(buckets[i], new_cap)
+            run = cache.executor(
+                ("bucket-retry-dist", plan.shape_a, plan.shape_b, plan.cap_a,
+                 plan.cap_b, plan.use_kernel, meta, t.rows_pb, plan.axis,
+                 _mesh_key(mesh)),
+                lambda m=meta: _build_bucket_dist_executor(
+                    m, mesh, plan.axis, plan.use_kernel, cache))
+            c2, v2, _ = run(ad, bd, args[i])
+            cols[i], vals[i] = c2, v2
+            plan.retry_events.append(dict(
+                round=attempt, bucket=i, old_cap=t.capacity,
+                new_cap=new_cap, need=need))
+            tables[i] = dataclasses.replace(t, capacity=new_cap)
+    if plan.retries == 0:
+        return out                     # fast path: nothing overflowed
+    plan.shard_tables = tuple(tables)  # reassemble reads the final widths
+    if plan._template is not None:
+        plan._template.grow_dist(plan.num_shards,
+                                 [t.rows_pb for t in tables],
+                                 [t.capacity for t in tables])
+    overflow = np.zeros(plan.num_shards, dtype=np.int64)
+    for t, n in zip(tables, nnzs):
+        overflow += np.where(t.valid,
+                             np.maximum(n - t.capacity, 0), 0).sum(axis=1)
+    return DistSpgemmOut(tuple(cols), tuple(vals), out.row_nnz, overflow)
+
+
 def execute(plan: SpgemmPlan, a, b, *, mesh=None, cache: PlanCache | None = None):
     """Run the planned numeric phase.
 
@@ -464,6 +960,12 @@ def execute(plan: SpgemmPlan, a, b, *, mesh=None, cache: PlanCache | None = None
     served from ``cache`` (default: the session cache) keyed on the plan's
     static signature — a second same-keyed plan reuses the compiled
     executable with zero retraces.
+
+    Plans armed with ``retry_safety`` run the overflow re-planning loop: any
+    bucket whose true ``row_nnz`` exceeded its capacity is re-executed at a
+    bumped (pow2-rounded) capacity and spliced back — the plan's capacities
+    are updated in place, so a subsequent :func:`execute` of the same plan
+    allocates right the first time.
     """
     cache = cache if cache is not None else _DEFAULT_CACHE
     ad, bd = _coerce_pair(plan, a, b)
@@ -484,8 +986,12 @@ def execute(plan: SpgemmPlan, a, b, *, mesh=None, cache: PlanCache | None = None
         run = cache.executor(
             _executor_key(plan, None),
             lambda: _build_local_executor(metas, plan.alloc.row_capacity,
-                                          plan.use_kernel, cache))
-        return run(ad, bd, *plan.device_args())
+                                          plan.use_kernel, cache,
+                                          masked=plan.pop_quant))
+        out = run(ad, bd, *plan.device_args())
+        if plan.retry_safety > 0:
+            out = _replan_local(plan, ad, bd, out, cache)
+        return out
 
     mesh = mesh if mesh is not None else plan.mesh
     if mesh is None:
@@ -508,7 +1014,10 @@ def execute(plan: SpgemmPlan, a, b, *, mesh=None, cache: PlanCache | None = None
     for t, n in zip(plan.shard_tables, nnzs):
         over = np.maximum(np.asarray(n, dtype=np.int64) - t.capacity, 0)
         overflow += np.where(t.valid, over, 0).sum(axis=1)
-    return DistSpgemmOut(tuple(cols), tuple(vals), tuple(nnzs), overflow)
+    out = DistSpgemmOut(tuple(cols), tuple(vals), tuple(nnzs), overflow)
+    if plan.retry_safety > 0:
+        out = _replan_dist(plan, ad, bd, out, cache, mesh)
+    return out
 
 
 # --------------------------------------------------------------------------- #

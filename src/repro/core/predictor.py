@@ -255,7 +255,7 @@ class AllocationPlan:
 
     @staticmethod
     def from_prediction(pred_structure, flopr, safety: float = 1.2,
-                        align: int = 8) -> "AllocationPlan":
+                        align: int = 8, pow2: bool = False) -> "AllocationPlan":
         import numpy as np
         ps = np.asarray(pred_structure, dtype=np.float64)
         fl = np.asarray(flopr, dtype=np.float64)
@@ -266,6 +266,11 @@ class AllocationPlan:
         # alignment must never push past the upper bound (flopr is always safe)
         ub = int(fl.max()) if fl.size else cap
         cap = min(cap, max(ub, align))
+        if pow2:
+            # capacity half of the plan-cache quantization knob: ≤2× slot
+            # inflation buys same-family different-seed executable sharing
+            from .binning import ceil_pow2
+            cap = ceil_pow2(cap)
         total = int(per_row.sum())
         total = max(align, ((total + align - 1) // align) * align)
         return AllocationPlan(cap, total, safety)
@@ -286,14 +291,16 @@ class BinnedAllocationPlan:
 
     @staticmethod
     def from_prediction(plan: BinningPlan, pred_structure, flopr,
-                        safety: float = 1.2, align: int = 8) -> "BinnedAllocationPlan":
+                        safety: float = 1.2, align: int = 8,
+                        pow2: bool = False) -> "BinnedAllocationPlan":
         ps = np.asarray(pred_structure, dtype=np.float64)
         fl = np.asarray(flopr, dtype=np.float64)
         caps = []
         total = 0
         for bucket in plan.buckets:
             sub = AllocationPlan.from_prediction(
-                ps[bucket.rows], fl[bucket.rows], safety=safety, align=align)
+                ps[bucket.rows], fl[bucket.rows], safety=safety, align=align,
+                pow2=pow2)
             caps.append(sub.row_capacity)
             total += bucket.n_rows * sub.row_capacity
         return BinnedAllocationPlan(
@@ -303,7 +310,8 @@ class BinnedAllocationPlan:
 
 
 def shard_bucket_capacities(plan: BinningPlan, pred_structure, flopr,
-                            bounds, safety: float = 1.2, align: int = 8
+                            bounds, safety: float = 1.2, align: int = 8,
+                            pow2: bool = False
                             ) -> tuple[np.ndarray, tuple[int, ...]]:
     """Per-(bucket, shard) predicted row capacities for distributed execution.
 
@@ -313,7 +321,7 @@ def shard_bucket_capacities(plan: BinningPlan, pred_structure, flopr,
     ``min(ceil(pred·safety), flopr)`` rule as :class:`AllocationPlan` but
     restricted to that intersection; ``static_caps[i]`` is the max over
     shards — the one static shape the SPMD executor can compile bucket ``i``
-    with.
+    with (pow2-rounded under ``pow2``, the plan-cache quantization knob).
 
     This replaces the legacy ``plan_distributed`` rule that sized every
     shard from the GLOBAL max predicted row: a hub row now inflates only its
@@ -334,6 +342,11 @@ def shard_bucket_capacities(plan: BinningPlan, pred_structure, flopr,
             if ids.size:
                 caps[i, s] = AllocationPlan.from_prediction(
                     ps[ids], fl[ids], safety=safety, align=align).row_capacity
-    static_caps = tuple(int(max(align, caps[i].max()))
-                        for i in range(len(plan.buckets)))
+    if pow2:
+        from .binning import ceil_pow2
+        static_caps = tuple(ceil_pow2(int(max(align, caps[i].max())))
+                            for i in range(len(plan.buckets)))
+    else:
+        static_caps = tuple(int(max(align, caps[i].max()))
+                            for i in range(len(plan.buckets)))
     return caps, static_caps

@@ -209,7 +209,7 @@ def routed_spgemm_rows(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
         return SpGEMMOut(*kops.spgemm_numeric_routed(
             a, b, rows, max_deg_a=deg_a, max_deg_b=deg_b,
             row_capacity=row_capacity, block_rows=block_rows,
-            route=route, tile_n=tile_n, n_tiles=n_tiles))
+            route=route, tile_n=tile_n, n_tiles=n_tiles, span=span))
     if route == ROUTE_SPA:
         return spgemm_rows_spa(a, b, rows, row_capacity=row_capacity,
                                max_deg_a=deg_a, max_deg_b=deg_b,

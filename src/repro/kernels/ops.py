@@ -108,15 +108,18 @@ def spgemm_numeric(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
 def spgemm_numeric_spa(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
                        max_deg_a: int, max_deg_b: int, row_capacity: int,
                        tile_n: int, n_tiles: int = 0, block_rows: int = 8,
-                       rownnz_b=None):
+                       span: int = 0, rownnz_b=None):
     """Dense-SPA kernel numeric phase + XLA compaction — same output
     contract as :func:`spgemm_numeric` (col/row_nnz/overflow identical,
     values to float tolerance).  ``n_tiles·tile_n`` must bound every row's
-    product-column extent; the default covers the full column space."""
+    product-column extent; the default tiles the planner's ``span`` bound
+    (the banded/FEM lever), or the full column space when no span is
+    known."""
     from repro.core.spgemm import compact_dense
     if tile_n <= 0:
         from repro.core.binning import spa_tile, DEFAULT_LANE_BUDGET
-        tile_n, n_tiles = spa_tile(b.ncols, DEFAULT_LANE_BUDGET)
+        tile_n, n_tiles = spa_tile(min(span, b.ncols) if span else b.ncols,
+                                   DEFAULT_LANE_BUDGET)
     acc, pres, lo = _acc_k.spa_numeric_pallas(
         a.rpt, a.col, a.val, b.rpt, b.col, b.val, rows,
         max_deg_a=max_deg_a, max_deg_b=max_deg_b, ncols_b=b.ncols,
@@ -128,14 +131,15 @@ def spgemm_numeric_spa(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
 def spgemm_numeric_routed(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
                           max_deg_a: int, max_deg_b: int, row_capacity: int,
                           block_rows: int = 8, route: str = ROUTE_ESC,
-                          tile_n: int = 0, n_tiles: int = 0, rownnz_b=None):
+                          tile_n: int = 0, n_tiles: int = 0, span: int = 0,
+                          rownnz_b=None):
     """Route-dispatched numeric phase — ``spgemm_binned``'s per-bucket
     kernel entry point."""
     if route == ROUTE_SPA:
         return spgemm_numeric_spa(
             a, b, rows, max_deg_a=max_deg_a, max_deg_b=max_deg_b,
             row_capacity=row_capacity, tile_n=tile_n, n_tiles=n_tiles,
-            block_rows=block_rows, rownnz_b=rownnz_b)
+            block_rows=block_rows, span=span, rownnz_b=rownnz_b)
     return spgemm_numeric(a, b, rows, max_deg_a=max_deg_a,
                           max_deg_b=max_deg_b, row_capacity=row_capacity,
                           block_rows=block_rows, rownnz_b=rownnz_b)

@@ -116,7 +116,14 @@ def _operands_of(it: Instr) -> list[str]:
     m = _OPERANDS.match(it.rest[i + len(it.opcode):])
     if not m:
         return []
-    return [x.strip().lstrip("%") for x in m.group(1).split(",") if x.strip()]
+    body = m.group(1)
+    # current jax prints operands with inline types whose layouts carry
+    # commas ("f32[512,512]{1,0} %Arg_0.1"), so comma-splitting breaks —
+    # the %-prefixed name tokens are the operands in both old and new text
+    names = re.findall(r"%([\w\.\-]+)", body)
+    if names:
+        return names
+    return [x.strip() for x in body.split(",") if x.strip()]
 
 
 _SLICE_OPS = {"dynamic-slice", "gather", "slice"}
@@ -300,12 +307,18 @@ def analyze(hlo: str) -> dict:
                     for k, v in branch_costs[bi][2].items():
                         co[k] = co.get(k, 0) + v
             else:
-                # fusion/call: flops and collectives propagate; internal
-                # bytes are register/VMEM traffic, not HBM — excluded
-                # (the caller counted the fusion's operand/output bytes).
+                # fusion: flops and collectives propagate; internal bytes
+                # are register/VMEM traffic, not HBM — excluded (the caller
+                # counted the fusion's operand/output bytes).  call /
+                # custom-call wrappers counted NO bytes at the call site
+                # (current jax's parallel CPU backend wraps fusions in
+                # call(to_apply=...)), so their bodies' HBM bytes propagate.
+                passthru = it.opcode in ("call", "custom-call")
                 for nm in names:
-                    cf, _cb, cc = total(nm, depth + 1)
+                    cf, cb, cc = total(nm, depth + 1)
                     fl += cf
+                    if passthru:
+                        by += cb
                     for k, v in cc.items():
                         co[k] = co.get(k, 0) + v
         memo[name] = (fl, by, co)

@@ -1,0 +1,91 @@
+"""Paper-accuracy regression gate (Section VI, ISSUE 4).
+
+Runs a deterministic 75-case subset of the 625-case suite — 3 cases per
+ordered family pair, same per-case seeds as the full sweep — and pins the
+proposed method's mean absolute relative error against the committed
+baseline artifact (``artifacts/accuracy_subset_baseline.json``).  Any future
+refactor of the predictor pipeline that degrades the paper's 1.56% / 8.12%
+headline behaviour fails this gate in CI.  Regenerate the baseline (after an
+*intentional* accuracy change only) with::
+
+    PYTHONPATH=src python -m repro.core.experiment --subset-baseline
+
+The full 625-case sweep stays behind ``-m slow``.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import experiment
+
+BASELINE = os.path.abspath(experiment.SUBSET_BASELINE)
+
+
+@pytest.fixture(scope="module")
+def subset():
+    return experiment.run_subset()
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    assert os.path.exists(BASELINE), (
+        "committed baseline missing — run "
+        "`python -m repro.core.experiment --subset-baseline`")
+    with open(BASELINE) as f:
+        return json.load(f)
+
+
+def test_subset_is_deterministic_and_balanced():
+    pairs = experiment.subset_pairs()
+    assert len(pairs) == 75
+    assert len(set(pairs)) == 75, "subset picks must be distinct"
+    assert pairs == experiment.subset_pairs(), "subset must be deterministic"
+
+
+def test_proposed_beats_reference(subset):
+    """The paper's core claim on the subset: mean |e2| < mean |e1| (and the
+    proposed method wins the majority of cases)."""
+    agg = subset["aggregate"]
+    assert agg["mean_abs_e2"] < agg["mean_abs_e1"]
+    assert agg["proposed_better_frac"] > 0.5
+    # eq. 5 identity holds to float precision on every case
+    assert agg["max_eq5_resid"] < 1e-9
+
+
+def test_proposed_error_below_pinned_threshold(subset, baseline):
+    agg = subset["aggregate"]
+    pin = baseline["pinned"]
+    assert agg["mean_abs_e2"] <= pin["max_mean_abs_e2"], (
+        "proposed-method accuracy regressed past the committed gate")
+    assert agg["worst_abs_e2"] <= pin["max_worst_abs_e2"], (
+        "proposed-method worst case regressed past the committed gate")
+
+
+def test_per_case_errors_track_baseline(subset, baseline):
+    """No single case may silently blow up even while the aggregate stays
+    under the gate (the drift band absorbs RNG-stream changes across numpy
+    versions — anything larger is a real regression)."""
+    base = {(c["A"], c["B"]): c for c in baseline["cases"]}
+    drift = baseline["pinned"]["max_case_abs_e2_drift"]
+    assert len(subset["cases"]) == len(base)
+    for c in subset["cases"]:
+        b = base[(c["A"], c["B"])]
+        assert abs(c["e2"] - b["e2"]) <= drift, (c["A"], c["B"], c["e2"],
+                                                 b["e2"])
+        # exact NNZ / FLOP are sampling-independent: bitwise stable
+        assert c["nnz"] == b["nnz"] and c["flop"] == b["flop"]
+
+
+@pytest.mark.slow
+def test_full_625_sweep(tmp_path):
+    """The complete Section VI reproduction (minutes; slow-marked)."""
+    res = experiment.run_all(out_path=str(tmp_path / "accuracy_625.json"),
+                             verbose=False)
+    agg = res["aggregate"]
+    assert agg["n_cases"] == 625
+    assert agg["mean_abs_e2"] < agg["mean_abs_e1"]
+    assert agg["mean_abs_e2"] < 0.05          # paper: 1.56%
+    assert agg["proposed_better_frac"] > 0.6  # paper: 81.4%
+    assert agg["max_eq5_resid"] < 1e-9

@@ -1,0 +1,220 @@
+"""Hypothesis property tests for plan-cache key quantization (DESIGN.md §7).
+
+The quantization contract: pow2-padded key components collide **iff** the
+underlying quantities fall in the same pow2 band, padding never exceeds 2×,
+and a quantized plan's execution is bitwise-equal to the unquantized plan's
+on ``row_nnz``/``col`` (values to float tolerance — accumulation order is
+unchanged, so in practice they are bitwise too)."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal CI image — deterministic tests must still run
+    from hypothesis_shim import given, settings, st
+
+from repro.sparse import random as sprand
+from repro.core import binning, plan as plan_mod
+
+
+# --------------------------------------------------------------------------- #
+# ceil_pow2: the quantizer itself
+# --------------------------------------------------------------------------- #
+@given(st.integers(1, 1 << 20), st.integers(1, 1 << 20))
+@settings(max_examples=60, deadline=None)
+def test_pow2_keys_collide_iff_same_band(n1, n2):
+    """Padded populations collide exactly when the real populations share a
+    pow2 band (band = ceil(log2 n)) — the hit-rate guarantee AND the
+    no-false-sharing guarantee of the quantized key."""
+    same_band = (max(0, n1 - 1).bit_length() == max(0, n2 - 1).bit_length())
+    assert (binning.ceil_pow2(n1) == binning.ceil_pow2(n2)) == same_band
+
+
+@given(st.integers(1, 1 << 20))
+@settings(max_examples=40, deadline=None)
+def test_pow2_padding_bounded_by_2x(n):
+    p = binning.ceil_pow2(n)
+    assert n <= p < 2 * n or (n == p == 1)
+    assert p & (p - 1) == 0
+
+
+# --------------------------------------------------------------------------- #
+# quantized plans: key structure and padding bounds
+# --------------------------------------------------------------------------- #
+def _key_buckets(plan):
+    """The per-bucket (signature, population, capacity) tuples of the key."""
+    return plan.key[-1]
+
+
+@given(st.integers(0, 10_000), st.integers(2, 8), st.integers(60, 300))
+@settings(max_examples=10, deadline=None)
+def test_quantized_key_pads_populations_and_caps_pow2(seed, d, m):
+    a = sprand.erdos_renyi(m, m, d, seed=seed)
+    b = sprand.erdos_renyi(m, m, max(2, d - 1), seed=seed + 1)
+    u = plan_mod.plan_spgemm(a, b, safety=2.0,
+                             deg_align=binning.POW2_DEG_ALIGN)
+    q = plan_mod.plan_spgemm(a, b, safety=2.0, pop_quant=True,
+                             sample_rows=u.sample_rows)
+    # same degree rounding → same bucket partition; the quantized key holds
+    # each bucket's pow2-padded population and pow2 capacity
+    assert len(u.binning.buckets) == len(q.binning.buckets)
+    for (sig_u, pop_u, cap_u), (sig_q, pop_q, cap_q) in zip(
+            _key_buckets(u), _key_buckets(q)):
+        assert sig_q == sig_u
+        assert pop_q == binning.ceil_pow2(pop_u)
+        assert pop_u <= pop_q < 2 * max(1, pop_u) or pop_u == pop_q == 1
+        assert cap_q == binning.ceil_pow2(cap_u)
+    # total row padding ≤ 2×
+    assert q.stats()["row_padding"] <= 2.0
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_quantized_execution_bitwise_equal_on_row_nnz_col(seed):
+    """Padding rows (repeat-last fill, masked at assembly) must not change
+    the result: quantized execute == unquantized execute on row_nnz/col
+    bitwise, values to float tolerance, overflow identical."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(50, 250))
+    fam = seed % 3
+    if fam == 0:
+        a = sprand.erdos_renyi(m, m, int(rng.integers(2, 7)), seed=seed)
+        b = sprand.erdos_renyi(m, m, int(rng.integers(2, 7)), seed=seed + 1)
+    elif fam == 1:
+        a = sprand.power_law(m, m, 4, 1.5, seed=seed)
+        b = sprand.power_law(m, m, 3, 1.6, seed=seed + 1)
+    else:
+        a = sprand.banded(m, m, int(rng.integers(4, 12)), 8, seed=seed)
+        b = sprand.banded(m, m, int(rng.integers(4, 12)), 6, seed=seed + 1)
+    cache = plan_mod.PlanCache()
+    u = plan_mod.plan_spgemm(a, b, safety=2.0,
+                             deg_align=binning.POW2_DEG_ALIGN)
+    q = plan_mod.plan_spgemm(a, b, safety=2.0, pop_quant=True,
+                             sample_rows=u.sample_rows)
+    ou = plan_mod.execute(u, a, b, cache=cache)
+    oq = plan_mod.execute(q, a, b, cache=cache)
+    np.testing.assert_array_equal(np.asarray(oq.row_nnz),
+                                  np.asarray(ou.row_nnz))
+    assert int(oq.overflow) == int(ou.overflow)
+    cu = plan_mod.reassemble(u, ou, on_overflow="ignore")
+    cq = plan_mod.reassemble(q, oq, on_overflow="ignore")
+    np.testing.assert_array_equal(cq.rpt, cu.rpt)
+    np.testing.assert_array_equal(cq.col, cu.col)
+    np.testing.assert_allclose(cq.val, cu.val, rtol=1e-6, atol=1e-6)
+
+
+def test_same_structure_revalued_pair_shares_quantized_executor():
+    """The serving scenario survives quantization: same pattern + new values
+    → same quantized key, zero retraces."""
+    a = sprand.banded(300, 300, 8, 12, seed=31)
+    rng = np.random.default_rng(1)
+    a2 = type(a)(rpt=a.rpt.copy(), col=a.col.copy(),
+                 val=rng.standard_normal(a.nnz).astype(np.float32),
+                 shape=a.shape)
+    cache = plan_mod.PlanCache()
+    p1 = plan_mod.plan_spgemm(a, a, safety=2.0, pop_quant=True)
+    plan_mod.execute(p1, a, a, cache=cache)
+    t = cache.stats()["traces"]
+    p2 = plan_mod.plan_spgemm(a2, a2, safety=2.0, pop_quant=True)
+    assert p2.key == p1.key
+    plan_mod.execute(p2, a2, a2, cache=cache)
+    assert cache.stats()["traces"] == t
+    assert cache.stats()["hits"] >= 1
+
+
+def test_quantized_and_unquantized_keys_never_collide():
+    """A plan whose populations happen to be pow2 already must not collide
+    with a quantized plan (the executors differ: masked vs unmasked)."""
+    a = sprand.banded(256, 256, 6, 8, seed=3)
+    u = plan_mod.plan_spgemm(a, a, safety=2.0,
+                             deg_align=binning.POW2_DEG_ALIGN)
+    q = plan_mod.plan_spgemm(a, a, safety=2.0, pop_quant=True,
+                             sample_rows=u.sample_rows)
+    assert u.key != q.key
+
+
+# --------------------------------------------------------------------------- #
+# plan templates: the family-level compile contract (DESIGN.md §7)
+# --------------------------------------------------------------------------- #
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_template_planned_execution_matches_direct_plan(seed):
+    """Planning against a template re-bins rows under the template's (≥)
+    bounds — the result must stay bitwise-equal to a directly-planned
+    execution on row_nnz/col (values to float tolerance)."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(60, 250))
+    fam = seed % 3
+    if fam == 0:
+        gen = lambda s: sprand.erdos_renyi(m, m, 4, seed=s)
+    elif fam == 1:
+        gen = lambda s: sprand.power_law(m, m, 4, 1.5, seed=s)
+    else:
+        gen = lambda s: sprand.banded(m, m, 8, 10, seed=s)
+    cache = plan_mod.PlanCache()
+    tpl = plan_mod.PlanTemplate.from_plan(
+        plan_mod.plan_spgemm(gen(seed), gen(seed + 1), safety=2.0,
+                             pop_quant=True))
+    a, b = gen(seed + 2), gen(seed + 3)
+    t = plan_mod.plan_spgemm(a, b, safety=2.0, template=tpl)
+    d = plan_mod.plan_spgemm(a, b, safety=2.0, sample_rows=t.sample_rows)
+    ot = plan_mod.execute(t, a, b, cache=cache)
+    od = plan_mod.execute(d, a, b, cache=cache)
+    np.testing.assert_array_equal(np.asarray(ot.row_nnz),
+                                  np.asarray(od.row_nnz))
+    ct = plan_mod.reassemble(t, ot, on_overflow="ignore")
+    cd = plan_mod.reassemble(d, od, on_overflow="ignore")
+    np.testing.assert_array_equal(ct.rpt, cd.rpt)
+    np.testing.assert_array_equal(ct.col, cd.col)
+    np.testing.assert_allclose(ct.val, cd.val, rtol=1e-5, atol=1e-5)
+
+
+def test_template_growth_is_monotone_and_converges():
+    """Once a member has grown the template, re-planning ANY already-seen
+    member changes nothing (same key, no growth, zero retraces)."""
+    gen = lambda s: (sprand.erdos_renyi(400, 400, 4, seed=s),
+                     sprand.erdos_renyi(400, 400, 3, seed=s + 50))
+    cache = plan_mod.PlanCache()
+    tpl = plan_mod.PlanTemplate.from_plan(
+        plan_mod.plan_spgemm(*gen(0), safety=1.3, pop_quant=True))
+    members = [gen(i) for i in range(4)]
+    for a, b in members:
+        plan_mod.execute(plan_mod.plan_spgemm(a, b, safety=1.3, template=tpl),
+                         a, b, cache=cache)
+    g = tpl.growths
+    t = cache.stats()["traces"]
+    keys = set()
+    for a, b in members:
+        p = plan_mod.plan_spgemm(a, b, safety=1.3, template=tpl)
+        plan_mod.execute(p, a, b, cache=cache)
+        keys.add(p.key)
+    assert tpl.growths == g, "re-planning a seen member grew the template"
+    assert cache.stats()["traces"] == t, "steady-state member retraced"
+    assert len(keys) == 1, "steady-state members landed on different keys"
+
+
+def test_template_distributed_keys_shared_after_warmup():
+    """num_shards planning (no mesh needed) through a template: steady-state
+    members share the distributed key too."""
+    gen = lambda s: (sprand.banded(300, 300, 10, 12, seed=s),
+                     sprand.banded(300, 300, 8, 10, seed=s + 50))
+    tpl = plan_mod.PlanTemplate.from_plan(
+        plan_mod.plan_spgemm(*gen(0), safety=1.3, pop_quant=True))
+    members = [gen(i) for i in range(3)]
+    for a, b in members:                      # warm the dist profile
+        plan_mod.plan_spgemm(a, b, safety=1.3, template=tpl, num_shards=4)
+    keys = {plan_mod.plan_spgemm(a, b, safety=1.3, template=tpl,
+                                 num_shards=4).key for a, b in members}
+    assert len(keys) == 1
+
+
+def test_template_rejects_mismatched_shapes_and_unquantized_source():
+    a = sprand.banded(200, 200, 6, 8, seed=1)
+    p = plan_mod.plan_spgemm(a, a, safety=2.0, pop_quant=True)
+    tpl = plan_mod.PlanTemplate.from_plan(p)
+    small = sprand.banded(100, 100, 6, 8, seed=2)
+    with pytest.raises(ValueError, match="shapes"):
+        plan_mod.plan_spgemm(small, small, template=tpl)
+    u = plan_mod.plan_spgemm(a, a, safety=2.0)
+    with pytest.raises(ValueError, match="pop_quant"):
+        plan_mod.PlanTemplate.from_plan(u)

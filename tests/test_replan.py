@@ -1,0 +1,281 @@
+"""Overflow re-planning loop (core/plan.py, DESIGN.md §7): adversarial
+under-allocation on every suite family.
+
+``safety=0`` floors every bucket capacity at the 8-slot alignment minimum, so
+the numeric phase overflows by construction; the armed retry loop must
+converge, only the overflowing buckets may re-execute (trace-count pinned
+through ``PlanCache``), and the spliced result must match an ample-capacity
+``spgemm_binned`` run bitwise on ``row_nnz``/``col``.  The 4-device
+shard_map variant runs in a subprocess (device-count env must precede jax
+init), like ``tests/test_distributed.py``."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.sparse import random as sprand
+from repro.sparse.formats import CSR, spgemm_dense_oracle
+from repro.core import plan as plan_mod, spgemm
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _families():
+    return [
+        ("er", sprand.erdos_renyi(400, 400, 4, seed=25),
+         sprand.erdos_renyi(400, 400, 3, seed=26)),
+        ("pl", sprand.power_law(500, 500, 5, 1.5, seed=21),
+         sprand.power_law(500, 500, 4, 1.6, seed=22)),
+        ("rmat", sprand.rmat(400, 400, 2000, seed=31),
+         sprand.rmat(400, 400, 1600, seed=32)),
+        ("band", sprand.banded(400, 400, 10, 14, seed=23),
+         sprand.banded(400, 400, 8, 12, seed=24)),
+        ("fem", sprand.banded(300, 300, 40, 30, seed=51),
+         sprand.banded(300, 300, 32, 28, seed=52)),
+    ]
+
+
+def _ample_reference(p, a, b):
+    """Ample-capacity binned run on the same sample — the ground truth the
+    retried result must match bitwise on row_nnz/col."""
+    pa = plan_mod.plan_spgemm(a, b, safety=64.0, sample_rows=p.sample_rows)
+    oa = spgemm.spgemm_binned(pa.to_device(a, "a"), pa.to_device(b, "b"),
+                              pa.binning, alloc=pa.alloc)
+    assert int(oa.overflow) == 0, "reference must not overflow"
+    return pa, oa
+
+
+@pytest.mark.parametrize("name,a,b",
+                         _families(),
+                         ids=[f[0] for f in _families()])
+def test_replan_converges_and_matches_ample(name, a, b):
+    cache = plan_mod.PlanCache()
+    p = plan_mod.plan_spgemm(a, b, safety=0.0, retry_safety=1.5)
+    caps_before = list(p.alloc.bucket_capacities)
+    out = plan_mod.execute(p, a, b, cache=cache)
+
+    pa, oa = _ample_reference(p, a, b)
+    ref_nnz = np.asarray(oa.row_nnz)
+    overflowed = {i for i, bk in enumerate(p.binning.buckets)
+                  if int(ref_nnz[bk.rows].max()) > caps_before[i]}
+    assert overflowed, f"{name}: safety=0 failed to force under-allocation"
+
+    # converged: every dropped entry recovered through the bumped buckets
+    assert p.retries >= 1
+    assert int(out.overflow) == 0
+    # ONLY the overflowing buckets re-executed...
+    assert {e["bucket"] for e in p.retry_events} == overflowed
+    # ...each through exactly one freshly-traced per-bucket executor
+    assert cache.stats()["traces"] == 1 + len(p.retry_events)
+    for e in p.retry_events:
+        assert e["new_cap"] >= e["need"] > e["old_cap"]
+
+    # bitwise contract vs the ample run
+    np.testing.assert_array_equal(np.asarray(out.row_nnz), ref_nnz)
+    c = plan_mod.reassemble(p, out)
+    ca = plan_mod.reassemble(pa, oa)
+    np.testing.assert_array_equal(c.rpt, ca.rpt)
+    np.testing.assert_array_equal(c.col, ca.col)
+    np.testing.assert_allclose(c.val, ca.val, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(c.to_dense(), spgemm_dense_oracle(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+    # the plan's capacities were bumped in place: a second execute of the
+    # SAME plan allocates right the first time (no retry rounds)
+    out2 = plan_mod.execute(p, a, b, cache=cache)
+    assert p.retries == 0 and int(out2.overflow) == 0
+
+
+def test_no_overflow_fast_path_zero_retraces():
+    """Armed retry + ample safety: the fast path costs one host readback of
+    row_nnz and ZERO retraces — serving traffic never pays for the loop."""
+    a = sprand.banded(300, 300, 8, 10, seed=3)
+    cache = plan_mod.PlanCache()
+    p = plan_mod.plan_spgemm(a, a, safety=2.0, retry_safety=1.5)
+    out = plan_mod.execute(p, a, a, cache=cache)
+    assert p.retries == 0 and not p.retry_events
+    assert int(out.overflow) == 0
+    t = cache.stats()["traces"]
+    plan_mod.execute(p, a, a, cache=cache)
+    assert cache.stats()["traces"] == t, "no-overflow fast path retraced"
+
+
+def _hub_matrix(m=400, hub_deg=60):
+    """Low-degree bulk + one hub row: only the hub's bucket under-allocates
+    at the 8-slot floor (bulk rows never reference the hub row, so their
+    output stays ≤ 3 nnz)."""
+    rng = np.random.default_rng(7)
+    r = np.arange(1, m)
+    rows = np.repeat(r, 2)
+    cols = np.stack([r, np.minimum(r + 1, m - 1)], axis=1).reshape(-1)
+    hub_cols = rng.choice(np.arange(1, m), hub_deg, replace=False)
+    rows = np.concatenate([np.zeros(hub_deg, np.int64), rows])
+    cols = np.concatenate([hub_cols, cols])
+    vals = rng.standard_normal(rows.size).astype(np.float32)
+    return CSR.from_coo(rows, cols, vals, (m, m))
+
+
+def test_only_hub_bucket_retries():
+    """Partial overflow: the bulk buckets stay untouched (capacities AND
+    executors), only the hub's bucket pays the retry."""
+    a = _hub_matrix()
+    cache = plan_mod.PlanCache()
+    p = plan_mod.plan_spgemm(a, a, safety=0.0, retry_safety=1.5)
+    hub_bucket = int(p.binning.row_bucket[0])
+    out = plan_mod.execute(p, a, a, cache=cache)
+    assert int(out.overflow) == 0
+    assert {e["bucket"] for e in p.retry_events} == {hub_bucket}
+    assert cache.stats()["traces"] == 1 + len(p.retry_events)
+    caps = p.alloc.bucket_capacities
+    for i, cap in enumerate(caps):
+        if i != hub_bucket:
+            assert cap == 8, "non-overflowing bucket capacity was bumped"
+    c = plan_mod.reassemble(p, out)
+    np.testing.assert_allclose(c.to_dense(), spgemm_dense_oracle(a, a),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_replan_with_kernel_route():
+    a = sprand.banded(300, 300, 12, 10, seed=5)
+    b = sprand.banded(300, 300, 8, 10, seed=6)
+    p = plan_mod.plan_spgemm(a, b, safety=0.0, retry_safety=1.5,
+                             use_kernel=True)
+    out = plan_mod.execute(p, a, b, cache=plan_mod.PlanCache())
+    assert p.retries >= 1 and int(out.overflow) == 0
+    c = plan_mod.reassemble(p, out)
+    np.testing.assert_allclose(c.to_dense(), spgemm_dense_oracle(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_replan_with_pop_quant():
+    """Quantized plans retry too: padded bucket tables re-execute whole, pad
+    rows stay masked out of the overflow count."""
+    a = sprand.power_law(500, 500, 5, 1.5, seed=21)
+    b = sprand.power_law(500, 500, 4, 1.6, seed=22)
+    p = plan_mod.plan_spgemm(a, b, safety=0.0, retry_safety=1.5,
+                             pop_quant=True)
+    out = plan_mod.execute(p, a, b, cache=plan_mod.PlanCache())
+    assert p.retries >= 1 and int(out.overflow) == 0
+    c = plan_mod.reassemble(p, out)
+    np.testing.assert_allclose(c.to_dense(), spgemm_dense_oracle(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_max_retries_zero_leaves_overflow_surfaced():
+    """An armed loop with no budget must not silently truncate — overflow
+    stays on the result and reassemble raises."""
+    a = sprand.banded(200, 200, 10, 12, seed=9)
+    p = plan_mod.plan_spgemm(a, a, safety=0.0, retry_safety=1.5,
+                             max_retries=0)
+    out = plan_mod.execute(p, a, a, cache=plan_mod.PlanCache())
+    assert p.retries == 0
+    assert int(out.overflow) > 0
+    with pytest.raises(ValueError, match="overflow"):
+        plan_mod.reassemble(p, out)
+
+
+# --------------------------------------------------------------------------- #
+# 4-device shard_map: the distributed retry loop (subprocess, like
+# tests/test_distributed.py)
+# --------------------------------------------------------------------------- #
+REPLAN_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+
+from repro.sparse import random as sprand
+from repro.sparse.formats import CSR, spgemm_dense_oracle
+from repro.core import plan as plan_mod, spgemm
+
+def revalue(m, seed):
+    rng = np.random.default_rng(seed)
+    return CSR(rpt=m.rpt.copy(), col=m.col.copy(),
+               val=rng.standard_normal(m.nnz).astype(np.float32),
+               shape=m.shape)
+
+mesh = jax.make_mesh((4,), ("data",))
+fams = [
+    ("er", sprand.erdos_renyi(400, 400, 4, seed=25),
+     sprand.erdos_renyi(400, 400, 3, seed=26)),
+    ("pl", sprand.power_law(500, 500, 5, 1.5, seed=21),
+     sprand.power_law(500, 500, 4, 1.6, seed=22)),
+    ("rmat", sprand.rmat(400, 400, 2000, seed=31),
+     sprand.rmat(400, 400, 1600, seed=32)),
+    ("band", sprand.banded(400, 400, 10, 14, seed=23),
+     sprand.banded(400, 400, 8, 12, seed=24)),
+    ("fem", sprand.banded(300, 300, 40, 30, seed=51),
+     sprand.banded(300, 300, 32, 28, seed=52)),
+]
+out = {}
+for fam, a, b in fams:
+    cache = plan_mod.PlanCache()
+    p = plan_mod.plan_spgemm(a, b, mesh=mesh, safety=0.0, retry_safety=1.5)
+    caps_before = [t.capacity for t in p.shard_tables]
+    res = plan_mod.execute(p, a, b, cache=cache)
+    c = plan_mod.reassemble(p, res)
+
+    # ample single-device binned reference on the same sample
+    pa = plan_mod.plan_spgemm(a, b, safety=64.0, sample_rows=p.sample_rows)
+    oa = spgemm.spgemm_binned(pa.to_device(a, "a"), pa.to_device(b, "b"),
+                              pa.binning, alloc=pa.alloc)
+    ca = plan_mod.reassemble(pa, oa)
+    ref_nnz = np.asarray(oa.row_nnz)
+    overflowed = sorted(
+        i for i, bk in enumerate(p.binning.buckets)
+        if int(ref_nnz[bk.rows].max()) > caps_before[i])
+
+    # serving after the retry: same structure, new values — the bumped plan
+    # re-keys onto its final capacities, so the pair pays fresh executors
+    # ONCE and the retry loop never fires again for this structure
+    a2, b2 = revalue(a, 91), revalue(b, 92)
+    p2 = plan_mod.plan_spgemm(a2, b2, mesh=mesh, safety=0.0,
+                              retry_safety=1.5)
+    res2 = plan_mod.execute(p2, a2, b2, cache=cache)
+    retraces2 = (cache.stats()["traces"]
+                 - (1 + len(p.retry_events)))   # base + per-bucket retries
+
+    out[fam] = dict(
+        retries=p.retries,
+        retried=sorted({e["bucket"] for e in p.retry_events}),
+        overflowed=overflowed,
+        traces=cache.stats()["traces"],
+        events=len(p.retry_events),
+        overflow=int(res.shard_overflow.sum()),
+        overflow2=int(res2.shard_overflow.sum()),
+        retraces2=retraces2,
+        rpt_eq=bool((c.rpt == ca.rpt).all()),
+        col_eq=bool((c.col == ca.col).all()),
+        vdiff=float(np.abs(c.val - ca.val).max()),
+        ref_err=float(np.abs(c.to_dense() - spgemm_dense_oracle(a, b)).max()),
+    )
+print(json.dumps(out))
+"""
+
+
+def _run(script: str, timeout: int = 900) -> dict:
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_replan_4dev_all_families():
+    rec = _run(REPLAN_SCRIPT)
+    for fam, r in rec.items():
+        assert r["retries"] >= 1, (fam, r)
+        assert r["overflow"] == 0, (fam, r)
+        assert r["retried"] == r["overflowed"], (fam, r)
+        assert r["traces"] == 1 + r["events"], (fam, r)
+        assert r["rpt_eq"] and r["col_eq"], (fam, r)
+        assert r["vdiff"] < 1e-4, (fam, r)
+        assert r["ref_err"] < 1e-3, (fam, r)
+        # serving pair through the armed loop: converged, zero NEW retraces
+        assert r["overflow2"] == 0, (fam, r)
+        assert r["retraces2"] == 0, (fam, r)
