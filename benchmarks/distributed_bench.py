@@ -30,13 +30,15 @@ import numpy as np
 
 from repro.sparse import random as sprand
 from repro.sparse.formats import CSR
-from repro.core import distributed, oracle
+from repro.core import oracle
 from repro.core import plan as plan_mod
 
 try:
     from .common import timeit, emit, reset_records, write_bench_json
+    from . import legacy_distributed as distributed
 except ImportError:   # invoked as a script: python benchmarks/distributed_bench.py
     from common import timeit, emit, reset_records, write_bench_json
+    import legacy_distributed as distributed
 
 _LAST: dict = {}
 

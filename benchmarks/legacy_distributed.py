@@ -1,12 +1,14 @@
-"""Distributed SpGEMM — the LEGACY global-pad shard path.
+"""Distributed SpGEMM — the LEGACY global-pad shard path (BENCHMARK BASELINE).
 
-This module is the pre-plan-pipeline baseline: one global ``row_capacity``
-(sized by the worst predicted row in the whole matrix) and one global-degree
-sort-merge pass per shard.  It is kept as the benchmark baseline
-(``benchmarks/distributed_bench.py``: binned-routed vs legacy global-pad)
-and for API compatibility; new code should use the unified planner/executor
-in :mod:`repro.core.plan` (DESIGN.md §6), which runs each shard through the
-binned routed kernels with per-bucket-per-shard capacities::
+Retired from the library (it lived at ``repro.core.distributed`` through
+PR 4): one global ``row_capacity`` (sized by the worst predicted row in the
+whole matrix) and one global-degree sort-merge pass per shard, with A AND B
+fully replicated to every device.  It survives only here, as the baseline
+``benchmarks/distributed_bench.py`` / ``benchmarks/comm_bench.py`` measure
+the unified pipeline against; library code uses the planner/executor in
+:mod:`repro.core.plan` (DESIGN.md §6–§8), which runs each shard through the
+binned routed kernels with per-bucket-per-shard capacities — and, with
+``n_panels``, column-partitions B instead of replicating it::
 
     plan = plan_spgemm(a, b, mesh=mesh,
                        pop_quant=True,      # pow2-quantized plan-cache keys
@@ -42,10 +44,10 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.sparse.formats import CSR
-from . import csr as csr_mod
-from . import oracle
-from . import partition as part_mod
-from .spgemm import gather_products, _accumulate_block
+from repro.core import csr as csr_mod
+from repro.core import oracle
+from repro.core import partition as part_mod
+from repro.core.spgemm import gather_products, _accumulate_block
 
 
 @dataclasses.dataclass
@@ -114,7 +116,7 @@ def reassemble(plan: DistSpGEMMPlan, col, val, row_nnz, ncols: int, *,
     no-check behavior.
     """
     if overflow is not None:
-        from .plan import _check_overflow
+        from repro.core.plan import _check_overflow
         _check_overflow(int(np.asarray(overflow).sum()), overflow,
                         on_overflow)
     # seed with typed empties: all-empty shard outputs (every row zero nnz,

@@ -15,13 +15,21 @@ import traceback
 from . import common
 
 
-def _distributed_subprocess() -> None:
-    """The distributed bench needs the 4-device env var BEFORE jax init, so
-    it runs as a subprocess (it writes its own BENCH_distributed.json)."""
-    script = os.path.join(os.path.dirname(__file__), "distributed_bench.py")
-    res = subprocess.run([sys.executable, script], check=False)
-    if res.returncode:
-        raise RuntimeError(f"distributed_bench exited {res.returncode}")
+def _subprocess_bench(name: str):
+    """Benches needing the 4-device env var BEFORE jax init run as
+    subprocesses (each writes its own BENCH_*.json)."""
+    script = os.path.join(os.path.dirname(__file__), name)
+
+    def run() -> None:
+        res = subprocess.run([sys.executable, script], check=False)
+        if res.returncode:
+            raise RuntimeError(f"{name} exited {res.returncode}")
+
+    return run
+
+
+_distributed_subprocess = _subprocess_bench("distributed_bench.py")
+_comm_subprocess = _subprocess_bench("comm_bench.py")
 
 
 def main() -> None:
@@ -39,6 +47,7 @@ def main() -> None:
         ("moe capacity (beyond-paper)", moe_capacity_bench.run),
         ("partition (load balance)", partition_bench.run),
         ("distributed (plan/execute vs legacy)", _distributed_subprocess),
+        ("comm (panel-gathered B vs replicated)", _comm_subprocess),
     ]
     common.reset_records()
     failed = 0

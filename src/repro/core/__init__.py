@@ -8,7 +8,8 @@
 
 def __getattr__(name):
     if name in ("plan_spgemm", "execute", "reassemble", "plan_cache",
-                "SpgemmPlan", "PlanCache", "DistSpgemmOut"):
+                "SpgemmPlan", "PlanCache", "DistSpgemmOut", "PlanTemplate",
+                "TemplateRegistry", "template_registry"):
         from . import plan as _plan
         return getattr(_plan, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

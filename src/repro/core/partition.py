@@ -41,6 +41,92 @@ def balanced_contiguous(weights: np.ndarray, num_parts: int) -> Partition:
     return Partition(bounds=bounds, part_weight=pw, imbalance=imb)
 
 
+# --------------------------------------------------------------------------- #
+# Column panels (DESIGN.md §8): the output column space of C = A·B is split
+# into contiguous panels of B columns so the distributed numeric phase can
+# lay B out along a second (or folded) mesh axis instead of replicating it.
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class PanelPartition:
+    """Contiguous column panels of B: ``[edges[p], edges[p+1])`` per panel."""
+
+    edges: np.ndarray         # int64 (n_panels+1,) column boundaries, 0..ncols
+    panel_nnz: np.ndarray     # int64 (n_panels,) B entries per panel
+    quantized: bool = False   # edges snapped to the pow2 grid (cache-stable)
+
+    @property
+    def n_panels(self) -> int:
+        return int(self.edges.size - 1)
+
+    @property
+    def key(self) -> tuple:
+        """Hashable static half — part of the panel plan-cache key."""
+        return (self.n_panels, self.quantized,
+                tuple(int(e) for e in self.edges))
+
+    def panel_of(self, cols: np.ndarray) -> np.ndarray:
+        """Column id → owning panel index."""
+        return np.searchsorted(self.edges, np.asarray(cols), side="right") - 1
+
+
+def panel_grid(ncols: int, n_panels: int) -> int:
+    """The pow2 edge grid quantized panel boundaries snap to.
+
+    Coarse enough that same-family different-seed edge jitter collapses onto
+    one grid point (cache-stable keys), fine enough (≤ ~1/8 of a panel, the
+    snap is half a grid step) that snapping cannot materially unbalance the
+    panels."""
+    from .binning import floor_pow2
+    return max(1, floor_pow2(max(1, ncols // (4 * max(1, n_panels)))))
+
+
+def quantize_panel_edges(edges: np.ndarray, ncols: int) -> np.ndarray:
+    """Snap interior panel edges to the pow2 grid (endpoints fixed).
+
+    Two edge lists collide after quantization **iff** every interior edge
+    pair falls in the same grid band (nearest grid point) — the panel half
+    of the plan-cache quantization contract (``tests/test_panels.py``).
+    Monotonicity is preserved; degenerate inputs may yield empty panels,
+    which execute as no-ops."""
+    edges = np.asarray(edges, dtype=np.int64)
+    g = panel_grid(ncols, edges.size - 1)
+    inner = np.clip((edges[1:-1] + g // 2) // g * g, 0, ncols)
+    out = np.concatenate([edges[:1], inner, edges[-1:]])
+    return np.maximum.accumulate(out)
+
+
+def column_panels(b, n_panels: int, *, quantize: bool = False
+                  ) -> PanelPartition:
+    """Split B's column space into ``n_panels`` contiguous panels with
+    ~equal B nnz per panel (prefix-split over per-column counts, the column
+    analogue of :func:`balanced_contiguous`).
+
+    ``quantize`` snaps the interior edges to the pow2 grid so same-family
+    different-seed matrices land on identical panel keys (the §7 plan-cache
+    quantization knob, extended to panels)."""
+    ncols = int(b.shape[1])
+    counts = np.bincount(np.asarray(b.col, dtype=np.int64),
+                         minlength=max(1, ncols)).astype(np.float64)
+    cum = np.cumsum(counts[:ncols]) if ncols else np.zeros(0)
+    total = cum[-1] if cum.size else 0.0
+    targets = total * (np.arange(1, n_panels) / n_panels)
+    # edge e means panel boundary BEFORE column e: prefix nnz of cols < e
+    inner = np.searchsorted(cum, targets, side="left") + 1 if ncols else \
+        np.zeros(n_panels - 1, dtype=np.int64)
+    edges = np.concatenate([[0], np.minimum(inner, ncols),
+                            [ncols]]).astype(np.int64)
+    edges = np.maximum.accumulate(edges)
+    if quantize:
+        edges = quantize_panel_edges(edges, ncols)
+    pnnz = np.zeros(n_panels, dtype=np.int64)
+    for p in range(n_panels):
+        lo, hi = int(edges[p]), int(edges[p + 1])
+        pnnz[p] = int(cum[hi - 1] - (cum[lo - 1] if lo else 0.0)) if hi > lo \
+            else 0
+    return PanelPartition(edges=edges, panel_nnz=pnnz,
+                          quantized=bool(quantize))
+
+
 def static_row_assignment(part: Partition, rows_per_part: int) -> np.ndarray:
     """(num_parts, rows_per_part) row-id table, padded by repeating the last
     row of each range — the static-shape input shard_map needs."""

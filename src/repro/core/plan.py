@@ -80,7 +80,8 @@ from . import oracle
 from . import partition as part_mod
 from . import predictor as predictor_mod
 from .csr import COL_SENTINEL, CSRDevice
-from .spgemm import SpGEMMOut, pad_to_capacity, routed_spgemm_rows
+from .spgemm import (SpGEMMOut, PanelSpgemmOut, pad_to_capacity,
+                     routed_spgemm_rows)
 
 
 # --------------------------------------------------------------------------- #
@@ -182,6 +183,24 @@ class SpgemmPlan:
     shard_tables: tuple[BucketShardTable, ...] = ()
     shard_capacities: np.ndarray | None = None  # (buckets, shards) per-shard need
     mesh: object = None             # not part of the key (see _mesh_key)
+    # column-partitioned B (DESIGN.md §8); n_panels == 0 → replicated-B mode
+    n_panels: int = 0
+    panels: part_mod.PanelPartition | None = None
+    panel_deg_b: tuple = ()         # per-bucket panel deg_b bound (≤ full deg_b)
+    panel_caps: np.ndarray | None = None   # (buckets, n_panels) current caps
+    row_shards: int = 0             # distributed: num_shards // n_panels
+    _panel_host: tuple | None = dataclasses.field(default=None, repr=False)
+    _panel_caps_dev: tuple = ()     # single-device per-panel operand capacities
+    _panel_gather: object = None    # PanelGather (distributed numeric operands)
+    # cached structure-only device uploads: gather indices (distributed) or
+    # per-panel rpt/col (single-device) — the two modes are exclusive
+    _panel_dev: tuple | None = dataclasses.field(default=None, repr=False)
+    _nnz_b: int = 0                 # planned B nnz (panel gather map validity)
+    # (nnz, col-sum) fingerprints of the PLANNED operands: the panel gather
+    # maps bake both structures in, so execute() rejects a swapped operand
+    # instead of silently combining it with the wrong index maps
+    _panel_a_fp: tuple | None = None
+    _panel_b_fp: tuple | None = None
     _template: object = None        # PlanTemplate this plan was fit against
     _pop_override: tuple | None = dataclasses.field(default=None, repr=False)
     _device_args: tuple | None = dataclasses.field(default=None, repr=False)
@@ -245,6 +264,28 @@ class SpgemmPlan:
     def key(self) -> tuple:
         """The static half of the compile contract (mesh fingerprint added
         at executor-lookup time, see :func:`_executor_key`)."""
+        if self.n_panels:
+            # panel plans key on the panel layout (quantized edges), the
+            # gathered-operand statics, and per-bucket panel degree bounds
+            # and capacities — the whole numeric compile contract of §8
+            if self.distributed:
+                buckets = tuple(
+                    (bk.signature, db, t.rows_pb, t.capacity)
+                    for bk, db, t in zip(self.binning.buckets,
+                                         self.panel_deg_b, self.shard_tables))
+                pan = (self.panels.key, self.row_shards,
+                       self._panel_gather.nref, self._panel_gather.ecap)
+            else:
+                buckets = tuple(
+                    (bk.signature, db, pop,
+                     tuple(int(c) for c in self.panel_caps[i]))
+                    for i, (bk, db, pop) in enumerate(
+                        zip(self.binning.buckets, self.panel_deg_b,
+                            self.local_populations())))
+                pan = (self.panels.key, self._panel_caps_dev)
+            return ("spgemm-plan-panels", self.num_shards, self.axis,
+                    self.use_kernel, self.pop_quant, self.shape_a,
+                    self.shape_b, self.cap_a, buckets, pan)
         if self.distributed:
             buckets = tuple(
                 (bk.signature, t.rows_pb, t.capacity)
@@ -307,11 +348,47 @@ class SpgemmPlan:
                 retries=self.retries,
                 retry_events=list(self.retry_events),
                 final_capacities=(
+                    [[int(c) for c in row] for row in self.panel_caps]
+                    if self.n_panels else
                     [t.capacity for t in self.shard_tables]
                     if self.distributed else
                     list(self.alloc.bucket_capacities)),
             )
+        if self.n_panels:
+            out.update(
+                n_panels=self.n_panels,
+                panel_edges=[int(e) for e in self.panels.edges],
+                panel_nnz=[int(n) for n in self.panels.panel_nnz],
+            )
+            if self.distributed:
+                out.update(row_shards=self.row_shards,
+                           comm=self.comm_stats())
         return out
+
+    def comm_stats(self) -> dict:
+        """Per-device B footprint + gather volume of a panel-distributed plan
+        vs the replicated-B executor — the §8 acceptance metric
+        (``benchmarks/comm_bench.py`` → ``BENCH_comm.json``)."""
+        if not (self.n_panels and self.distributed):
+            raise ValueError("comm_stats needs a distributed panel plan")
+        pg = self._panel_gather
+        # index+value bytes per entry (int32 col + float32 val) + rpt words
+        rep_bytes = self.cap_b * 8 + (self.shape_b[0] + 1) * 4
+        dev_bytes = pg.ecap * 8 + (pg.nref + 1) * 4
+        payload_max = int(pg.ref_nnz.max()) if pg.ref_nnz.size else 0
+        return dict(
+            n_panels=self.n_panels,
+            devices=self.num_shards,
+            row_shards=self.row_shards,
+            replicated_b_bytes=int(rep_bytes),
+            per_device_b_bytes=int(dev_bytes),
+            footprint_reduction=round(rep_bytes / max(1, dev_bytes), 3),
+            b_nnz=int(self._nnz_b),
+            payload_entries_max=payload_max,
+            payload_reduction=round(self._nnz_b / max(1, payload_max), 3),
+            gathered_entries_total=int(pg.ref_nnz.sum()),
+            gathered_bytes_total=int(pg.ref_nnz.sum()) * 8,
+        )
 
 
 class DistSpgemmOut(NamedTuple):
@@ -501,6 +578,94 @@ class PlanTemplate:
 
 
 # --------------------------------------------------------------------------- #
+# Automatic template selection — a session registry keyed on a cheap
+# structural sketch, so callers get template-level executor sharing without
+# holding the PlanTemplate handle (``plan_spgemm(template="auto")``).
+# --------------------------------------------------------------------------- #
+def _structural_sketch(a, b) -> tuple:
+    """Cheap structural fingerprint of an operand pair: exact shapes plus a
+    vector of log2 degree-regime statistics (mean/median gather width, mean
+    A degree, mean referenced-B degree).
+
+    The shapes match EXACTLY (templates require it); the statistics are
+    matched with a tolerance by :class:`TemplateRegistry` — any hard
+    quantization boundary would split a family whose seed-to-seed jitter
+    straddles it, which is exactly the fragmentation templates exist to
+    remove.  Genuinely different degree regimes differ by ≥ 1 in these
+    log2 stats and never match at the default tolerance."""
+    rownnz_b = np.diff(np.asarray(b.rpt, dtype=np.int64))
+    deg_a, dbmax, width = binning_mod.row_widths(
+        np.asarray(a.rpt), np.asarray(a.col), rownnz_b)
+    if width.size:
+        vec = (float(np.log2(max(1.0, width.mean()))),
+               float(np.log2(max(1.0, np.median(width)))),
+               float(np.log2(max(1.0, deg_a.mean()))),
+               float(np.log2(1.0 + dbmax.mean())))
+    else:
+        vec = (0.0, 0.0, 0.0, 0.0)
+    return (tuple(a.shape), tuple(b.shape)), vec
+
+
+class TemplateRegistry:
+    """Session-level structural-sketch → :class:`PlanTemplate` map.
+
+    ``plan_spgemm(template="auto")`` resolves the member's sketch here: a
+    hit plans against the family's existing template (growing it if the
+    member exceeds it), a miss seeds a fresh template from the member's own
+    quantized plan.  Matching is shape-exact and TOLERANT on the degree
+    statistics (within ``tol`` in log2 space), so same-family different-seed
+    members always resolve to one template even when a statistic sits on a
+    quantization boundary.  Steady state is the §7 template contract —
+    every member planned after the family's last growth shares one
+    executor — reached without any caller coordinating template handles.
+    """
+
+    def __init__(self, tol: float = 0.75) -> None:
+        self.tol = float(tol)
+        self._families: dict = {}    # shapes → [(stats_vec, PlanTemplate)]
+        self.hits = 0
+        self.misses = 0
+
+    def _match(self, shapes, vec) -> PlanTemplate | None:
+        for ref, tpl in self._families.get(shapes, ()):
+            if max(abs(x - y) for x, y in zip(vec, ref)) <= self.tol:
+                return tpl
+        return None
+
+    def lookup(self, a, b) -> PlanTemplate | None:
+        return self._match(*_structural_sketch(a, b))
+
+    def get_or_create(self, a, b, build) -> PlanTemplate:
+        # sketch ONCE per call — it is an O(nnz) host pass over A
+        shapes, vec = _structural_sketch(a, b)
+        tpl = self._match(shapes, vec)
+        if tpl is None:
+            self.misses += 1
+            tpl = build()
+            self._families.setdefault(shapes, []).append((vec, tpl))
+        else:
+            self.hits += 1
+        return tpl
+
+    def stats(self) -> dict:
+        tpls = [t for fam in self._families.values() for _, t in fam]
+        return dict(size=len(tpls), hits=self.hits, misses=self.misses,
+                    growths=sum(t.growths for t in tpls))
+
+    def clear(self) -> None:
+        self._families.clear()
+        self.hits = self.misses = 0
+
+
+_DEFAULT_REGISTRY = TemplateRegistry()
+
+
+def template_registry() -> TemplateRegistry:
+    """The session-level default template registry."""
+    return _DEFAULT_REGISTRY
+
+
+# --------------------------------------------------------------------------- #
 # Planning
 # --------------------------------------------------------------------------- #
 def _device_capacity(nnz: int) -> int:
@@ -561,6 +726,150 @@ def _build_shard_tables(binplan: binning_mod.BinningPlan,
     return tuple(tables)
 
 
+# --------------------------------------------------------------------------- #
+# Column-partitioned B (DESIGN.md §8): panel slicing + the ragged gather that
+# replaces full operand replication in the distributed numeric phase.
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class PanelGather:
+    """Structure-only half of the panel-gathered numeric operands.
+
+    Built ONCE at plan time from the bucket row tables (host, launch-time —
+    the materialized form of the ragged all-to-all): device ``d = s·P + p``
+    (row shard ``s``, panel ``p``) receives ONLY the panel-``p`` entries of
+    the B rows shard ``s``'s A-rows actually reference, as a compact CSR of
+    ``nref`` rows.  A's column indices are remapped per row shard into the
+    compact row space, so the unmodified gather kernels
+    (``csr.expand_products``) run against the gathered operand unchanged.
+
+    Index arrays are seed-structure only and upload once per plan; the
+    value payload (``g_idx`` → ``b.val``) is re-gathered per execute, which
+    is what lets a revalued serving pair reuse every compiled executor.
+    """
+
+    nref: int               # compact referenced-row count (padded, pow2 opt)
+    ecap: int               # gathered entries per (shard, panel) (padded)
+    row_shards: int
+    n_panels: int
+    a_col: np.ndarray       # (row_shards, cap_a) int32 remapped A columns
+                            # (a shard's panels share one row)
+    g_rpt: np.ndarray       # (D, nref+1) int32 compact panel row pointers
+    g_col: np.ndarray       # (D, ecap) int32 absolute columns, sentinel pad
+    g_idx: np.ndarray       # (D, ecap) int64 → b.val entry index, -1 pad
+    ref_nnz: np.ndarray     # (D,) int64 true gathered entries (payload)
+
+
+def _slice_panels(b: CSR, edges: np.ndarray) -> tuple:
+    """Split host B into column panels in ONE pass.
+
+    Returns per panel ``(prpt, pcol, pidx)``: CSR row pointers over B's rows
+    restricted to the panel, the (absolute) column ids, and each entry's
+    index into ``b.col``/``b.val`` — the shared substrate of the symbolic
+    phase (per-panel degree tables) AND the numeric gather (the §8 dedup:
+    panels are sliced once, never per phase)."""
+    col = np.asarray(b.col, dtype=np.int64)
+    pid = np.searchsorted(np.asarray(edges, dtype=np.int64), col,
+                          side="right") - 1
+    rows_of = np.repeat(np.arange(b.nrows, dtype=np.int64), np.diff(b.rpt))
+    out = []
+    for p in range(len(edges) - 1):
+        idx = np.flatnonzero(pid == p)
+        prpt = np.zeros(b.nrows + 1, dtype=np.int64)
+        if idx.size:
+            np.cumsum(np.bincount(rows_of[idx], minlength=b.nrows),
+                      out=prpt[1:])
+        out.append((prpt, b.col[idx].astype(np.int32), idx))
+    return tuple(out)
+
+
+def _build_panel_gather(a: CSR, pslices, bounds, row_shards: int,
+                        n_panels: int, cap_a: int,
+                        pop_quant: bool) -> PanelGather:
+    """Materialize the per-device gathered-B operands (host, launch-time).
+
+    One referenced-row set per row shard (union over its buckets — shared by
+    every bucket, every panel, both phases and the retry loop), one entry
+    gather per (shard, panel)."""
+    bounds = np.asarray(bounds, dtype=np.int64)
+    nrows_b = pslices[0][0].size - 1
+    a_rpt = np.asarray(a.rpt, dtype=np.int64)
+    a_col_host = np.asarray(a.col, dtype=np.int64)
+    nnz_a = int(a_rpt[-1])
+    refs = []
+    for s in range(row_shards):
+        seg = a_col_host[a_rpt[bounds[s]]:a_rpt[bounds[s + 1]]]
+        refs.append(np.unique(seg))
+    nref = max(1, max((r.size for r in refs), default=1))
+    if pop_quant:
+        nref = binning_mod.ceil_pow2(nref)
+    d_total = row_shards * n_panels
+    # one remapped-A row per ROW SHARD — a shard's panels share it; the
+    # per-device (D, cap_a) layout is materialized only at upload time
+    # (np.repeat in _panel_dist_args), not retained host-side
+    a_col = np.zeros((row_shards, cap_a), dtype=np.int32)
+    panel_rows = [np.repeat(np.arange(nrows_b, dtype=np.int64),
+                            np.diff(prpt)) for prpt, _, _ in pslices]
+    sel_cols, sel_idx, sel_cnt = [], [], []
+    for s in range(row_shards):
+        remap = np.zeros(max(1, nrows_b), dtype=np.int64)
+        remap[refs[s]] = np.arange(refs[s].size)
+        in_ref = np.zeros(max(1, nrows_b), dtype=bool)
+        in_ref[refs[s]] = True
+        if nnz_a:
+            a_col[s, :nnz_a] = remap[a_col_host].astype(np.int32)
+        for p in range(n_panels):
+            prpt, pcol, pidx = pslices[p]
+            sel = np.flatnonzero(in_ref[panel_rows[p]])
+            sel_cols.append(pcol[sel])
+            sel_idx.append(pidx[sel])
+            # compact row pointers: panel entries are CSR-ordered, refs are
+            # ascending, so selected entries sort by compact row already
+            sel_cnt.append(np.bincount(remap[panel_rows[p][sel]],
+                                       minlength=nref))
+    ecap = max(8, max((c.size for c in sel_cols), default=0))
+    if pop_quant:
+        ecap = binning_mod.ceil_pow2(ecap)
+    g_rpt = np.zeros((d_total, nref + 1), dtype=np.int32)
+    g_col = np.full((d_total, ecap), COL_SENTINEL, dtype=np.int32)
+    g_idx = np.full((d_total, ecap), -1, dtype=np.int64)
+    ref_nnz = np.zeros(d_total, dtype=np.int64)
+    for d in range(d_total):
+        e = sel_cols[d].size
+        np.cumsum(sel_cnt[d], out=g_rpt[d, 1:])
+        g_col[d, :e] = sel_cols[d]
+        g_idx[d, :e] = sel_idx[d]
+        ref_nnz[d] = e
+    return PanelGather(nref=nref, ecap=ecap, row_shards=row_shards,
+                       n_panels=n_panels, a_col=a_col, g_rpt=g_rpt,
+                       g_col=g_col, g_idx=g_idx, ref_nnz=ref_nnz)
+
+
+def _gather_panel_values(pg: PanelGather, b: CSR) -> np.ndarray:
+    """The per-execute half of the ragged all-to-all: ship each device ONLY
+    its gathered panel's value payload (``ecap`` floats, vs ``cap_b``
+    replicated) — index arrays never move after planning."""
+    bval = np.asarray(b.val, dtype=np.float32)
+    safe = np.clip(pg.g_idx, 0, max(0, bval.size - 1))
+    vals = bval[safe] if bval.size else np.zeros(pg.g_idx.shape, np.float32)
+    return np.where(pg.g_idx >= 0, vals, np.float32(0.0))
+
+
+def _panel_meta(bucket: binning_mod.RowBucket, db_p: int, cap: int,
+                lane_budget: int = binning_mod.DEFAULT_LANE_BUDGET) -> tuple:
+    """Bucket execution metadata at the PANEL deg_b bound: the gather buffer
+    shrinks from ``deg_a·deg_b`` to ``deg_a·db_p`` lanes (a row's panel
+    products are a subset of its full products), so ``block_rows`` re-fits
+    the narrower width under the same VMEM budget.  Route/tile/span stay as
+    planned — outputs are route-invariant (DESIGN.md §5)."""
+    blk = binning_mod._pick_block_rows(bucket.deg_a * db_p, lane_budget,
+                                       binning_mod.DEFAULT_MAX_BLOCK_ROWS)
+    if bucket.route == binning_mod.ROUTE_SPA and bucket.tile_n:
+        blk = int(max(1, min(blk, binning_mod.floor_pow2(
+            max(1, lane_budget // bucket.tile_n)))))
+    return (bucket.deg_a, db_p, blk, bucket.route, bucket.tile_n,
+            bucket.n_tiles, bucket.span, int(cap))
+
+
 def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
                 axis: str = "data", seed: int = 0, safety: float = 1.3,
                 route: str = "auto", use_kernel: bool = False,
@@ -569,7 +878,9 @@ def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
                 deg_align: int = 1, pop_quant: bool = False,
                 retry_safety: float = 0.0,
                 max_retries: int = 4,
-                template: PlanTemplate | None = None) -> SpgemmPlan:
+                template: "PlanTemplate | str | None" = None,
+                registry: "TemplateRegistry | None" = None,
+                n_panels: int = 0) -> SpgemmPlan:
     """Plan ``C = A·B``: sample → predict (binned, routed) → partition on
     predicted nnz → per-bucket(-per-shard) capacities.
 
@@ -587,9 +898,36 @@ def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
     ``template`` (implies ``pop_quant``) plans against a
     :class:`PlanTemplate`'s frozen bucket ladder instead of the member's own
     width histogram — the strongest sharing: every member planned after the
-    template's last growth lands on the SAME plan key.
+    template's last growth lands on the SAME plan key.  Pass
+    ``template="auto"`` to resolve the template from a
+    :class:`TemplateRegistry` (default: the session registry) keyed on a
+    cheap structural sketch — callers get steady-state executor reuse
+    without holding the handle.
+
+    ``n_panels`` > 0 selects **column-partitioned B** (DESIGN.md §8): B is
+    split into ``n_panels`` contiguous column panels; the symbolic phase
+    runs on per-panel degree tables and the numeric phase executes one
+    (bucket × panel) unit at panel-bound buffer widths.  Distributed plans
+    fold the panel axis onto the 1-D ``data`` axis — device ``d`` serves
+    (row shard ``d // n_panels``, panel ``d % n_panels``) and receives ONLY
+    the gathered panel entries its rows reference, replacing full B
+    replication (``num_shards`` must be a multiple of ``n_panels``).
     """
     assert a.ncols == b.nrows, (a.shape, b.shape)
+    if isinstance(template, str):
+        if template != "auto":
+            raise ValueError(f"unknown template mode {template!r}")
+        reg = registry if registry is not None else _DEFAULT_REGISTRY
+        template = reg.get_or_create(a, b, lambda: PlanTemplate.from_plan(
+            plan_spgemm(a, b, seed=seed, safety=safety, route=route,
+                        use_kernel=use_kernel, sample_rows=sample_rows,
+                        min_rows=min_rows, pop_quant=True)))
+    if n_panels and (mesh is not None or num_shards):
+        shards_chk = int(num_shards if num_shards else mesh.shape[axis])
+        if shards_chk % int(n_panels):
+            raise ValueError(
+                f"n_panels={n_panels} must divide the mesh axis size "
+                f"{shards_chk} (panels fold onto the data axis)")
     if template is not None:
         pop_quant = True
         template.grow_device_caps(a.nnz, b.nnz)
@@ -659,14 +997,50 @@ def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
         plan._template = template
         plan._pop_override = tuple(template.pops)
     if devpair is not None:
-        plan._planned_pair = ((a, b), devpair)
+        if n_panels:
+            # panel executes never touch a replicated device B — keeping the
+            # prediction pass's upload would pin cap_b·8 bytes per plan, the
+            # very replication §8 removes.  Drop it; keep A's upload and the
+            # HOST references (they gate the structure-fingerprint check).
+            plan._planned_pair = ((a, b), (devpair[0], None))
+        else:
+            plan._planned_pair = ((a, b), devpair)
+
+    structure_p = flopr_p = None
+    if n_panels:
+        # -- column panels (§8): slice B once; per-panel degree tables feed
+        # both the symbolic capacities and the numeric gather (the dedup) --
+        panels = part_mod.column_panels(b, int(n_panels), quantize=pop_quant)
+        pslices = _slice_panels(b, panels.edges)
+        dbmax_p, flopr_p = binning_mod.panel_row_tables(
+            a.rpt, a.col, [ps[0] for ps in pslices])
+        # per-panel predicted structure: eq. 4 applied per panel with the
+        # plan's sampled r* (flopr partitions exactly over panels, so the
+        # panel predictions sum to the full-row prediction)
+        structure_p = flopr_p.astype(np.float64) / max(float(cr), 1e-9)
+        dbrow = dbmax_p.max(axis=0) if dbmax_p.size else np.zeros(0, np.int64)
+        panel_align = binning_mod.POW2_DEG_ALIGN if pop_quant else deg_align
+        plan.n_panels = int(n_panels)
+        plan.panels = panels
+        plan.panel_deg_b = tuple(
+            binning_mod.round_deg(
+                int(dbrow[bk.rows].max()) if bk.n_rows else 1, panel_align)
+            for bk in binplan.buckets)
+        plan._panel_host = pslices
+        plan._nnz_b = int(b.nnz)
+        plan._panel_a_fp = (int(a.nnz),
+                            int(np.asarray(a.col, dtype=np.int64).sum()))
+        plan._panel_b_fp = (int(b.nnz),
+                            int(np.asarray(b.col, dtype=np.int64).sum()))
 
     if mesh is not None or num_shards:
         shards = int(num_shards if num_shards else mesh.shape[axis])
-        partn = part_mod.balanced_contiguous(structure, shards)
+        row_shards = shards // int(n_panels) if n_panels else shards
+        partn = part_mod.balanced_contiguous(structure, row_shards)
         caps_mat, static_caps = predictor_mod.shard_bucket_capacities(
             binplan, structure, flopr, partn.bounds, safety=safety,
-            pow2=pop_quant)
+            pow2=pop_quant, panel_structure=structure_p,
+            panel_flopr=flopr_p)
         rows_pb_list = slices = None
         if template is not None:
             # member per-bucket rows_pb (pow2) → grow the family profile,
@@ -680,16 +1054,44 @@ def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
                 member_pb.append(binning_mod.ceil_pow2(
                     int(max(1, counts.max())) if counts.size else 1))
             rows_pb_list, static_caps = template.grow_dist(
-                shards, member_pb, static_caps)
+                row_shards, member_pb, static_caps)
         plan.num_shards = shards
         plan.axis = axis
         plan.partition = partn
-        plan.shard_tables = _build_shard_tables(binplan, partn, static_caps,
-                                                pow2_rows=pop_quant,
-                                                rows_pb_list=rows_pb_list,
-                                                slices=slices)
+        tables = _build_shard_tables(binplan, partn, static_caps,
+                                     pow2_rows=pop_quant,
+                                     rows_pb_list=rows_pb_list,
+                                     slices=slices)
+        if n_panels:
+            # fold the panel axis onto the data axis: device d = s·P + p
+            # repeats row shard s's table for each of its P panels
+            tables = tuple(BucketShardTable(
+                table=np.repeat(t.table, int(n_panels), axis=0),
+                valid=np.repeat(t.valid, int(n_panels), axis=0),
+                capacity=t.capacity) for t in tables)
+            plan.row_shards = row_shards
+            plan.panel_caps = np.tile(
+                np.asarray(static_caps, dtype=np.int64)[:, None],
+                (1, int(n_panels)))
+            plan._panel_gather = _build_panel_gather(
+                a, pslices, partn.bounds, row_shards, int(n_panels), cap_a,
+                pop_quant)
+        plan.shard_tables = tables
         plan.shard_capacities = caps_mat
         plan.mesh = mesh
+    elif n_panels:
+        # single-device panel mode: per-(bucket, panel) capacities are the
+        # executor statics (each unit runs standalone, no SPMD coupling)
+        pc_mat, _ = predictor_mod.shard_bucket_capacities(
+            binplan, structure, flopr, np.array([0, a.nrows]), safety=safety,
+            panel_structure=structure_p, panel_flopr=flopr_p)
+        pc = np.maximum(8, pc_mat[:, 0, :])
+        if pop_quant:  # plain loop: np.vectorize dies on zero-bucket plans
+            pc = np.array([[binning_mod.ceil_pow2(int(c)) for c in row]
+                           for row in pc], dtype=np.int64).reshape(pc.shape)
+        plan.panel_caps = pc.astype(np.int64)
+        plan._panel_caps_dev = tuple(
+            _device_capacity(int(n)) for n in panels.panel_nnz)
     return plan
 
 
@@ -803,26 +1205,156 @@ def _build_dist_executor(metas: tuple, mesh, axis: str, use_kernel: bool,
     return jax.jit(fn)
 
 
-def _coerce_pair(plan: SpgemmPlan, a, b) -> tuple[CSRDevice, CSRDevice]:
-    def one(m, which: str, idx: int) -> CSRDevice:
-        cap = plan.cap_a if which == "a" else plan.cap_b
-        shape = plan.shape_a if which == "a" else plan.shape_b
-        if isinstance(m, CSRDevice):
-            # a pre-converted operand must sit at the plan's padded
-            # capacity, or the cached executor would silently retrace per
-            # distinct nnz (voiding the zero-retrace serving contract) —
-            # or worse, compute a different matrix without complaint
-            if m.shape != shape or m.capacity != cap:
-                raise ValueError(
-                    f"operand {which}: CSRDevice shape/capacity "
-                    f"{m.shape}/{m.capacity} does not match the plan's "
-                    f"{shape}/{cap} — convert with plan.to_device()")
-            return m
-        if plan._planned_pair is not None and m is plan._planned_pair[0][idx]:
-            return plan._planned_pair[1][idx]
-        return plan.to_device(m, which)
+def _build_local_panel_executor(metas: tuple, use_kernel: bool,
+                                cache: PlanCache, masked: bool = False):
+    """Single-device panel executor: one routed pass per (bucket × panel),
+    each at its own panel-bound gather width and its own per-panel capacity.
+    Panels partition the column space, so no merge pass follows — the
+    per-(bucket, panel) blocks ARE the output (:class:`PanelSpgemmOut`)."""
+    nb = len(metas)
 
-    return one(a, "a", 0), one(b, "b", 1)
+    @jax.jit
+    def run(ad, bps, *rest):
+        cache._note_trace()
+        masks = rest[:nb] if masked else (None,) * nb
+        tables = rest[nb:] if masked else rest
+        cols, vals, nnzs = [], [], []
+        overflow = jnp.int32(0)
+        for pmetas, rows, mask in zip(metas, tables, masks):
+            bc, bv, bn = [], [], []
+            for bp, meta in zip(bps, pmetas):
+                c, v, n, of = _run_bucket(ad, bp, rows, meta, use_kernel)
+                if masked:
+                    of = jnp.where(mask, jnp.maximum(n - meta[-1], 0), 0).sum()
+                bc.append(c)
+                bv.append(v)
+                bn.append(n.astype(jnp.int32))
+                overflow = overflow + of.astype(jnp.int32)
+            cols.append(tuple(bc))
+            vals.append(tuple(bv))
+            nnzs.append(tuple(bn))
+        return PanelSpgemmOut(tuple(cols), tuple(vals), tuple(nnzs), overflow)
+
+    return run
+
+
+def _build_panel_dist_executor(metas: tuple, shape_a, nref: int, ncols_b: int,
+                               mesh, axis: str, use_kernel: bool,
+                               cache: PlanCache):
+    """shard_map executor for column-partitioned B (DESIGN.md §8).
+
+    Device ``d = s·P + p`` runs row shard ``s``'s bucket tables against its
+    GATHERED panel operand — a compact CSR of only the B rows shard ``s``
+    references, panel ``p`` entries only — through the same routed per-bucket
+    dispatch as every other executor.  A's value/rpt arrays stay replicated;
+    A's column indices arrive remapped per device into the compact row
+    space.  Nothing else in the kernel stack changes: ``expand_products``
+    cannot tell a gathered panel from a full operand."""
+
+    def shard_fn(a_rpt, a_val, a_col, g_rpt, g_col, g_val, *tables):
+        cache._note_trace()
+        ad = CSRDevice(rpt=a_rpt, col=a_col[0], val=a_val,
+                       shape=tuple(shape_a))
+        bd = CSRDevice(rpt=g_rpt[0], col=g_col[0], val=g_val[0],
+                       shape=(nref, ncols_b))
+        outs = []
+        for meta, table in zip(metas, tables):
+            c, v, n, _ = _run_bucket(ad, bd, table[0], meta, use_kernel)
+            outs.extend([c[None], v[None], n.astype(jnp.int32)[None]])
+        return tuple(outs)
+
+    nb = len(metas)
+    in_specs = (P(), P(), P(axis, None), P(axis, None), P(axis, None),
+                P(axis, None)) + (P(axis, None),) * nb
+    out_specs = tuple(s for _ in range(nb)
+                      for s in (P(axis, None, None), P(axis, None, None),
+                                P(axis, None)))
+    fn = shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    return jax.jit(fn)
+
+
+def _panel_operands_local(plan: SpgemmPlan, b: CSR) -> list:
+    """Per-panel device CSRs at the plan's padded panel capacities.
+
+    Structure (rpt + padded col) is seed-structure only: built and uploaded
+    ONCE per plan (cached in ``_panel_dev``, the local twin of
+    :func:`_panel_dist_args`); only the value payload re-gathers from ``b``
+    per execute — the serving pair reuses executors AND index uploads."""
+    if plan._panel_dev is None:
+        structs = []
+        for (prpt, pcol, _), cap in zip(plan._panel_host,
+                                        plan._panel_caps_dev):
+            col = np.full(cap, COL_SENTINEL, dtype=np.int32)
+            col[:pcol.size] = pcol
+            structs.append((jnp.asarray(prpt, dtype=jnp.int32),
+                            jnp.asarray(col)))
+        plan._panel_dev = tuple(structs)
+    out = []
+    bval = np.asarray(b.val, dtype=np.float32)
+    for (rpt_d, col_d), (_, pcol, pidx), cap in zip(plan._panel_dev,
+                                                    plan._panel_host,
+                                                    plan._panel_caps_dev):
+        val = np.zeros(cap, dtype=np.float32)
+        val[:pcol.size] = bval[pidx]
+        out.append(CSRDevice(rpt=rpt_d, col=col_d, val=jnp.asarray(val),
+                             shape=b.shape))
+    return out
+
+
+def _panel_dist_args(plan: SpgemmPlan) -> tuple:
+    """Structure-only device uploads of the panel gather (once per plan)."""
+    if plan._panel_dev is None:
+        pg = plan._panel_gather
+        plan._panel_dev = (
+            jnp.asarray(np.repeat(pg.a_col, pg.n_panels, axis=0)),
+            jnp.asarray(pg.g_rpt), jnp.asarray(pg.g_col))
+    return plan._panel_dev
+
+
+def _check_panel_operand(plan: SpgemmPlan, m, which: str = "b") -> CSR:
+    """Panel plans bake operand STRUCTURE into the gather maps (B's entry
+    indices; distributed, also A's remapped columns), so a same-shape
+    different-structure operand would silently produce a wrong matrix.
+    Require the host CSR and match its (nnz, col-sum) fingerprint against
+    the planned operand's."""
+    shape = plan.shape_b if which == "b" else plan.shape_a
+    fp = plan._panel_b_fp if which == "b" else plan._panel_a_fp
+    if not isinstance(m, CSR):
+        raise TypeError(
+            f"panel plans bake operand {which}'s structure into the gather "
+            "maps — pass the host CSR operand, not a CSRDevice")
+    m_fp = (int(m.nnz), int(np.asarray(m.col, dtype=np.int64).sum()))
+    if m.shape != shape or m_fp != fp:
+        raise ValueError(
+            f"operand {which} shape/structure {m.shape}/nnz={m.nnz} does "
+            f"not match the planned operand ({shape}/nnz={fp[0]}) — the "
+            "panel gather map is structure-specific; re-plan for a new "
+            "sparsity pattern")
+    return m
+
+
+def _coerce_one(plan: SpgemmPlan, m, which: str, idx: int) -> CSRDevice:
+    cap = plan.cap_a if which == "a" else plan.cap_b
+    shape = plan.shape_a if which == "a" else plan.shape_b
+    if isinstance(m, CSRDevice):
+        # a pre-converted operand must sit at the plan's padded
+        # capacity, or the cached executor would silently retrace per
+        # distinct nnz (voiding the zero-retrace serving contract) —
+        # or worse, compute a different matrix without complaint
+        if m.shape != shape or m.capacity != cap:
+            raise ValueError(
+                f"operand {which}: CSRDevice shape/capacity "
+                f"{m.shape}/{m.capacity} does not match the plan's "
+                f"{shape}/{cap} — convert with plan.to_device()")
+        return m
+    if plan._planned_pair is not None and m is plan._planned_pair[0][idx]:
+        return plan._planned_pair[1][idx]
+    return plan.to_device(m, which)
+
+
+def _coerce_pair(plan: SpgemmPlan, a, b) -> tuple[CSRDevice, CSRDevice]:
+    return _coerce_one(plan, a, "a", 0), _coerce_one(plan, b, "b", 1)
 
 
 # --------------------------------------------------------------------------- #
@@ -950,6 +1482,153 @@ def _replan_dist(plan: SpgemmPlan, ad, bd, out: DistSpgemmOut,
     return DistSpgemmOut(tuple(cols), tuple(vals), out.row_nnz, overflow)
 
 
+def _replan_local_panels(plan: SpgemmPlan, ad, bps, out: PanelSpgemmOut,
+                         cache: PlanCache) -> PanelSpgemmOut:
+    """Single-device panel retry: the re-planning unit is (bucket × panel) —
+    an overflow in one panel of one bucket re-executes ONLY that block (the
+    other panels' outputs are reused verbatim), spliced by whole-block
+    replacement since panel blocks are independent."""
+    buckets = plan.binning.buckets
+    npan = plan.n_panels
+    caps = np.asarray(plan.panel_caps, dtype=np.int64).copy()
+    nnzs = [[np.asarray(out.row_nnz[i][p], dtype=np.int64)
+             for p in range(npan)] for i in range(len(buckets))]
+    cols = [list(bc) for bc in out.cols]
+    vals = [list(bv) for bv in out.vals]
+    args = plan.device_args()
+    tables = args[1 + len(buckets):] if plan.pop_quant else args[1:]
+    plan.retries = 0
+    plan.retry_events = []
+    for attempt in range(1, plan.max_retries + 1):
+        over = [(i, p) for i, bk in enumerate(buckets) if bk.n_rows
+                for p in range(npan)
+                if int(nnzs[i][p][:bk.n_rows].max(initial=0)) > caps[i, p]]
+        if not over:
+            break
+        plan.retries = attempt
+        for i, p in over:
+            bk = buckets[i]
+            need = int(nnzs[i][p][:bk.n_rows].max())
+            new_cap = _bumped_capacity(int(caps[i, p]), need,
+                                       plan.retry_safety, attempt)
+            meta = _panel_meta(bk, plan.panel_deg_b[i], new_cap)
+            pop = int(tables[i].shape[0])
+            run = cache.executor(
+                ("bucket-retry-panel", plan.shape_a, plan.shape_b,
+                 plan.cap_a, plan._panel_caps_dev[p], plan.use_kernel, meta,
+                 pop),
+                lambda m=meta: _build_bucket_executor(m, plan.use_kernel,
+                                                      cache))
+            c2, v2, _, _ = run(ad, bps[p], tables[i])
+            cols[i][p] = c2
+            vals[i][p] = v2
+            plan.retry_events.append(dict(
+                round=attempt, bucket=i, panel=p, old_cap=int(caps[i, p]),
+                new_cap=new_cap, need=need))
+            caps[i, p] = new_cap
+    if plan.retries == 0:
+        return out                     # fast path: nothing overflowed
+    plan.panel_caps = caps
+    overflow = 0
+    for i, bk in enumerate(buckets):
+        for p in range(npan):
+            overflow += int(np.maximum(
+                nnzs[i][p][:bk.n_rows] - caps[i, p], 0).sum())
+    return PanelSpgemmOut(tuple(tuple(bc) for bc in cols),
+                          tuple(tuple(bv) for bv in vals),
+                          out.row_nnz, jnp.int32(overflow))
+
+
+def _replan_dist_panels(plan: SpgemmPlan, ad, g_val_host: np.ndarray,
+                        out: DistSpgemmOut, cache: PlanCache
+                        ) -> DistSpgemmOut:
+    """Distributed panel retry: overflow is detected per (bucket × panel)
+    across that panel's device column, and ONLY the offending (bucket ×
+    panel) re-executes — one cached local per-bucket executor run per row
+    shard, against the SAME gathered operands the SPMD pass used (no
+    re-gather, no full-bucket SPMD re-run)."""
+    pg = plan._panel_gather
+    npan = plan.n_panels
+    ncols_b = plan.shape_b[1]
+    buckets = plan.binning.buckets
+    tables = list(plan.shard_tables)
+    caps = np.asarray(plan.panel_caps, dtype=np.int64).copy()
+    # truncation threshold per (bucket, panel): the width the executor
+    # ACTUALLY allocated — every panel of bucket i ran at t.capacity (the
+    # max over panels after an earlier bump), which may exceed caps[i, p];
+    # comparing against caps would re-execute blocks nothing truncated
+    alloc = np.array([[int(t.capacity)] * npan for t in tables],
+                     dtype=np.int64)
+    nnzs = [np.asarray(x, dtype=np.int64) for x in out.row_nnz]  # (D, pb)
+    cols = vals = None                 # materialized on first retry only
+    plan.retries = 0
+    plan.retry_events = []
+    for attempt in range(1, plan.max_retries + 1):
+        over = []
+        for i, t in enumerate(tables):
+            for p in range(npan):
+                need = int(np.where(t.valid[p::npan], nnzs[i][p::npan],
+                                    0).max(initial=0))
+                if need > alloc[i, p]:
+                    over.append((i, p, need))
+        if not over:
+            break
+        if cols is None:
+            cols = [np.asarray(c).copy() for c in out.cols]
+            vals = [np.asarray(v).copy() for v in out.vals]
+        plan.retries = attempt
+        for i, p, need in over:
+            t = tables[i]
+            new_cap = _bumped_capacity(int(caps[i, p]), need,
+                                       plan.retry_safety, attempt)
+            meta = _panel_meta(buckets[i], plan.panel_deg_b[i], new_cap)
+            run = cache.executor(
+                ("bucket-retry-panel-dist", plan.shape_a, plan.shape_b,
+                 plan.cap_a, pg.nref, pg.ecap, plan.use_kernel, meta,
+                 t.rows_pb),
+                lambda m=meta: _build_bucket_executor(m, plan.use_kernel,
+                                                      cache))
+            if new_cap > cols[i].shape[2]:
+                grow = new_cap - cols[i].shape[2]
+                cols[i] = np.concatenate(
+                    [cols[i], np.full(cols[i].shape[:2] + (grow,),
+                                      COL_SENTINEL, np.int32)], axis=2)
+                vals[i] = np.concatenate(
+                    [vals[i], np.zeros(vals[i].shape[:2] + (grow,),
+                                       np.float32)], axis=2)
+            for s in range(plan.row_shards):
+                d = s * npan + p
+                ad_d = CSRDevice(rpt=ad.rpt, col=jnp.asarray(pg.a_col[s]),
+                                 val=ad.val, shape=plan.shape_a)
+                bd_d = CSRDevice(rpt=jnp.asarray(pg.g_rpt[d]),
+                                 col=jnp.asarray(pg.g_col[d]),
+                                 val=jnp.asarray(g_val_host[d]),
+                                 shape=(pg.nref, ncols_b))
+                c2, v2, _, _ = run(ad_d, bd_d, jnp.asarray(t.table[d]))
+                cols[i][d, :, :new_cap] = np.asarray(c2)
+                vals[i][d, :, :new_cap] = np.asarray(v2)
+            plan.retry_events.append(dict(
+                round=attempt, bucket=i, panel=p, old_cap=int(caps[i, p]),
+                new_cap=new_cap, need=need))
+            caps[i, p] = new_cap
+            alloc[i, p] = new_cap
+    if plan.retries == 0:
+        return out                     # fast path: nothing overflowed
+    plan.panel_caps = caps
+    plan.shard_tables = tuple(
+        dataclasses.replace(t, capacity=int(caps[i].max()))
+        for i, t in enumerate(tables))
+    dev_panel = np.arange(plan.num_shards) % npan
+    overflow = np.zeros(plan.num_shards, dtype=np.int64)
+    for i, t in enumerate(plan.shard_tables):
+        # residual TRUNCATION (vs the allocated widths) — entries a block
+        # narrower than its true nnz actually dropped, not bookkeeping caps
+        cap_d = alloc[i, dev_panel][:, None]
+        overflow += np.where(t.valid,
+                             np.maximum(nnzs[i] - cap_d, 0), 0).sum(axis=1)
+    return DistSpgemmOut(tuple(cols), tuple(vals), out.row_nnz, overflow)
+
+
 def execute(plan: SpgemmPlan, a, b, *, mesh=None, cache: PlanCache | None = None):
     """Run the planned numeric phase.
 
@@ -968,18 +1647,49 @@ def execute(plan: SpgemmPlan, a, b, *, mesh=None, cache: PlanCache | None = None
     allocates right the first time.
     """
     cache = cache if cache is not None else _DEFAULT_CACHE
-    ad, bd = _coerce_pair(plan, a, b)
+    if plan.n_panels:
+        # the fingerprint check is an O(nnz) host pass — the PLANNED
+        # operands (the common serving identity) skip it for free
+        planned = plan._planned_pair[0] if plan._planned_pair is not None \
+            else (None, None)
+        if b is not planned[1]:
+            b = _check_panel_operand(plan, b, "b")
+        if plan.distributed and a is not planned[0]:
+            # the gather baked A's remapped columns too — an A with a
+            # different structure would pair its values with the plan's
+            # index maps and compute a different matrix without complaint
+            a = _check_panel_operand(plan, a, "a")
+        ad = _coerce_one(plan, a, "a", 0)
+        bd = None                      # B never replicates in panel mode
+    else:
+        ad, bd = _coerce_pair(plan, a, b)
     if not plan.binning.buckets:
+        if plan.distributed:
+            return DistSpgemmOut((), (), (),
+                                 np.zeros(plan.num_shards, dtype=np.int64))
+        if plan.n_panels:
+            return PanelSpgemmOut((), (), (), jnp.int32(0))
         cap = plan.alloc.row_capacity
-        empty = SpGEMMOut(jnp.full((0, cap), COL_SENTINEL, jnp.int32),
-                          jnp.zeros((0, cap), jnp.float32),
-                          jnp.zeros((0,), jnp.int32), jnp.int32(0))
-        if not plan.distributed:
-            return empty
-        return DistSpgemmOut((), (), (),
-                             np.zeros(plan.num_shards, dtype=np.int64))
+        return SpGEMMOut(jnp.full((0, cap), COL_SENTINEL, jnp.int32),
+                         jnp.zeros((0, cap), jnp.float32),
+                         jnp.zeros((0,), jnp.int32), jnp.int32(0))
 
     if not plan.distributed:
+        if plan.n_panels:
+            metas = tuple(
+                tuple(_panel_meta(bk, plan.panel_deg_b[i],
+                                  int(plan.panel_caps[i, p]))
+                      for p in range(plan.n_panels))
+                for i, bk in enumerate(plan.binning.buckets))
+            run = cache.executor(
+                _executor_key(plan, None),
+                lambda: _build_local_panel_executor(
+                    metas, plan.use_kernel, cache, masked=plan.pop_quant))
+            bps = _panel_operands_local(plan, b)
+            out = run(ad, bps, *plan.device_args()[1:])
+            if plan.retry_safety > 0:
+                out = _replan_local_panels(plan, ad, bps, out, cache)
+            return out
         metas = tuple(_bucket_meta(bk, cap)
                       for bk, cap in zip(plan.binning.buckets,
                                          plan.alloc.bucket_capacities))
@@ -1002,6 +1712,30 @@ def execute(plan: SpgemmPlan, a, b, *, mesh=None, cache: PlanCache | None = None
             f"plan was built for {plan.num_shards} shards but mesh axis "
             f"{plan.axis!r} has {int(mesh.shape[plan.axis])} devices — "
             "re-plan with this mesh")
+    if plan.n_panels:
+        pg = plan._panel_gather
+        metas = tuple(_panel_meta(bk, db, t.capacity)
+                      for bk, db, t in zip(plan.binning.buckets,
+                                           plan.panel_deg_b,
+                                           plan.shard_tables))
+        run = cache.executor(
+            _executor_key(plan, mesh),
+            lambda: _build_panel_dist_executor(
+                metas, plan.shape_a, pg.nref, plan.shape_b[1], mesh,
+                plan.axis, plan.use_kernel, cache))
+        g_val_host = _gather_panel_values(pg, b)
+        a_col_d, g_rpt_d, g_col_d = _panel_dist_args(plan)
+        flat = run(ad.rpt, ad.val, a_col_d, g_rpt_d, g_col_d,
+                   jnp.asarray(g_val_host), *plan.device_args())
+        cols, vals, nnzs = flat[0::3], flat[1::3], flat[2::3]
+        overflow = np.zeros(plan.num_shards, dtype=np.int64)
+        for t, n in zip(plan.shard_tables, nnzs):
+            over = np.maximum(np.asarray(n, dtype=np.int64) - t.capacity, 0)
+            overflow += np.where(t.valid, over, 0).sum(axis=1)
+        out = DistSpgemmOut(tuple(cols), tuple(vals), tuple(nnzs), overflow)
+        if plan.retry_safety > 0:
+            out = _replan_dist_panels(plan, ad, g_val_host, out, cache)
+        return out
     metas = tuple(_bucket_meta(bk, t.capacity)
                   for bk, t in zip(plan.binning.buckets, plan.shard_tables))
     run = cache.executor(
@@ -1048,6 +1782,26 @@ def reassemble(plan: SpgemmPlan, out, ncols: int | None = None, *,
     rows_out = [np.zeros(0, np.int64)]
     cols_out = [np.zeros(0, np.int64)]
     vals_out = [np.zeros(0, np.float32)]
+    if isinstance(out, PanelSpgemmOut):
+        # panels partition the column space: collecting every (bucket, panel)
+        # block as COO and letting from_coo's stable sort order the entries
+        # restores the single-matrix layout bitwise (DESIGN.md §8)
+        _check_overflow(int(out.overflow), [int(out.overflow)], on_overflow)
+        for i, bk in enumerate(plan.binning.buckets):
+            if bk.n_rows == 0:
+                continue
+            for p in range(plan.n_panels):
+                c_b = np.asarray(out.cols[i][p])[:bk.n_rows]
+                v_b = np.asarray(out.vals[i][p])[:bk.n_rows]
+                m = c_b != COL_SENTINEL
+                counts = m.sum(axis=1)
+                rows_out.append(np.repeat(bk.rows.astype(np.int64), counts))
+                cols_out.append(c_b[m].astype(np.int64))
+                vals_out.append(v_b[m])
+        return CSR.from_coo(np.concatenate(rows_out),
+                            np.concatenate(cols_out),
+                            np.concatenate(vals_out).astype(np.float32),
+                            (nrows, ncols), dedup=False)
     if isinstance(out, DistSpgemmOut):
         _check_overflow(int(out.shard_overflow.sum()), out.shard_overflow,
                         on_overflow)

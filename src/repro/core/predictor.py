@@ -311,7 +311,8 @@ class BinnedAllocationPlan:
 
 def shard_bucket_capacities(plan: BinningPlan, pred_structure, flopr,
                             bounds, safety: float = 1.2, align: int = 8,
-                            pow2: bool = False
+                            pow2: bool = False, panel_structure=None,
+                            panel_flopr=None
                             ) -> tuple[np.ndarray, tuple[int, ...]]:
     """Per-(bucket, shard) predicted row capacities for distributed execution.
 
@@ -328,20 +329,42 @@ def shard_bucket_capacities(plan: BinningPlan, pred_structure, flopr,
     own (small) bucket's capacity, and every other bucket's buffers stay
     sized by their own rows — see the regression test in
     ``tests/test_plan.py``.
+
+    **Column-partitioned B** (DESIGN.md §8): pass ``panel_structure`` /
+    ``panel_flopr`` — each ``(n_panels, nrows)``, the per-panel predicted
+    structure and per-panel FLOP from ``binning.panel_row_tables`` — and the
+    capacity unit becomes (bucket, shard, panel): ``caps[i, s, p]`` sizes
+    bucket ``i``'s output slots for shard ``s``'s rows restricted to panel
+    ``p``.  ``static_caps[i]`` is then the max over (shard, panel) — a
+    row's panel output is a subset of its full-row output, so panel static
+    capacities are ≤ the full-row ones (the second buffer win of panels,
+    after the B-footprint drop).
     """
     from .partition import shard_slices
-    ps = np.asarray(pred_structure, dtype=np.float64)
-    fl = np.asarray(flopr, dtype=np.float64)
     bounds = np.asarray(bounds)
     num_shards = bounds.size - 1
-    caps = np.zeros((len(plan.buckets), num_shards), dtype=np.int64)
+    # the replicated-B case is the 1-panel case: one sizing rule for both
+    if panel_structure is not None:
+        pps = np.asarray(panel_structure, dtype=np.float64)
+        pfl = np.asarray(panel_flopr, dtype=np.float64)
+    else:
+        pps = np.asarray(pred_structure, dtype=np.float64)[None]
+        pfl = np.asarray(flopr, dtype=np.float64)[None]
+    n_panels = pps.shape[0]
+    caps = np.zeros((len(plan.buckets), num_shards, n_panels),
+                    dtype=np.int64)
     for i, bucket in enumerate(plan.buckets):
         lo, hi = shard_slices(bucket.rows, bounds)
         for s in range(num_shards):
             ids = bucket.rows[lo[s]:hi[s]]
-            if ids.size:
-                caps[i, s] = AllocationPlan.from_prediction(
-                    ps[ids], fl[ids], safety=safety, align=align).row_capacity
+            if not ids.size:
+                continue
+            for p in range(n_panels):
+                caps[i, s, p] = AllocationPlan.from_prediction(
+                    pps[p, ids], pfl[p, ids], safety=safety,
+                    align=align).row_capacity
+    if panel_structure is None:
+        caps = caps[:, :, 0]
     if pow2:
         from .binning import ceil_pow2
         static_caps = tuple(ceil_pow2(int(max(align, caps[i].max())))

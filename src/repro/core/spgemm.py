@@ -33,6 +33,24 @@ class SpGEMMOut(NamedTuple):
     overflow: jax.Array  # scalar int32 — total entries dropped for capacity
 
 
+class PanelSpgemmOut(NamedTuple):
+    """Column-partitioned numeric-phase output (DESIGN.md §8).
+
+    One compacted block per (bucket, panel): ``cols[i][p]`` is
+    ``(bucket_rows, cap[i, p])`` int32 (COL_SENTINEL padded, ascending
+    ABSOLUTE column ids inside panel ``p``'s range).  Panels partition the
+    column space, so a row's full output is the panel blocks read in panel
+    order — no cross-panel merge pass is needed; ``reassemble`` (or any
+    COO sort) restores the single-matrix layout bitwise.
+    """
+
+    cols: tuple          # per bucket: tuple per panel (rows, cap_ip) int32
+    vals: tuple          # per bucket: tuple per panel (rows, cap_ip) float32
+    row_nnz: tuple       # per bucket: tuple per panel (rows,) int32 — true
+                         # per-panel nnz (may exceed the panel capacity)
+    overflow: jax.Array  # scalar int32 — entries dropped across all blocks
+
+
 def gather_products(a: CSRDevice, b: CSRDevice, rows: jax.Array,
                     max_deg_a: int, max_deg_b: int,
                     rownnz_b: jax.Array | None = None):

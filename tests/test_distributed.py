@@ -1,6 +1,11 @@
 """Distributed SpGEMM on a 4-device mesh: legacy global-pad baseline plus the
 unified plan/execute pipeline (core/plan.py).
 
+The legacy path is RETIRED from the library (PR 5): it lives at
+``benchmarks/legacy_distributed.py`` as the benchmark baseline, so its
+coverage here imports it from there (``sys.path`` injection — the
+benchmarks directory is not a package on the library path).
+
 Mesh tests run in subprocesses (device-count env must precede jax init);
 host-only legacy fixes (reassemble on all-empty outputs, overflow
 surfacing) run in-process."""
@@ -13,17 +18,31 @@ import numpy as np
 import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+BENCH = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                     "benchmarks"))
+
+
+def _legacy():
+    """Import the retired global-pad baseline from its benchmarks home."""
+    if BENCH not in sys.path:
+        sys.path.insert(0, BENCH)
+    import legacy_distributed
+    return legacy_distributed
+
 
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import json
+import sys
 import numpy as np
 import jax
 
+sys.path.insert(0, os.environ["BENCH_DIR"])
+import legacy_distributed as distributed
 from repro.sparse import random as sprand
 from repro.sparse.formats import spgemm_dense_oracle
-from repro.core import distributed, oracle
+from repro.core import oracle
 
 a = sprand.banded(600, 600, 18, 16, seed=5)
 b = sprand.banded(600, 600, 12, 20, seed=6)
@@ -113,7 +132,8 @@ print(json.dumps(out))
 
 
 def _run(script: str, timeout: int = 900) -> dict:
-    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu",
+               BENCH_DIR=BENCH)
     out = subprocess.run([sys.executable, "-c", script], env=env,
                          capture_output=True, text=True, timeout=timeout)
     assert out.returncode == 0, out.stderr[-3000:]
@@ -146,17 +166,25 @@ def test_plan_execute_matches_single_device_on_all_families():
 # legacy-path fixes (host-only, no mesh needed)
 # --------------------------------------------------------------------------- #
 def _empty_plan(num_shards=2, rows_per_shard=3):
-    from repro.core import distributed, partition
+    from repro.core import partition
+    distributed = _legacy()
     part = partition.balanced_contiguous(np.zeros(0), num_shards)
     table = np.zeros((num_shards, rows_per_shard), np.int32)
     valid = np.zeros((num_shards, rows_per_shard), bool)
     return distributed.DistSpGEMMPlan(table, valid, 8, part, 0.0)
 
 
+def test_legacy_not_importable_from_the_library():
+    """The global-pad shard path is retired: ``repro.core.distributed`` no
+    longer exists — the baseline lives only under benchmarks/."""
+    with pytest.raises(ImportError):
+        from repro.core import distributed  # noqa: F401
+
+
 def test_reassemble_all_empty_shard_outputs():
     """No valid rows at all (every shard empty) must reassemble to an empty
     CSR instead of crashing np.concatenate on an empty list."""
-    from repro.core import distributed
+    distributed = _legacy()
     plan = _empty_plan()
     col = np.full((2, 3, 8), np.iinfo(np.int32).max, np.int32)
     val = np.zeros((2, 3, 8), np.float32)
@@ -165,7 +193,8 @@ def test_reassemble_all_empty_shard_outputs():
 
 
 def test_reassemble_surfaces_overflow():
-    from repro.core import distributed, partition
+    from repro.core import partition
+    distributed = _legacy()
     part = partition.balanced_contiguous(np.ones(2), 1)
     plan = distributed.DistSpGEMMPlan(
         np.array([[0, 1]], np.int32), np.ones((1, 2), bool), 2, part, 4.0)

@@ -10,7 +10,7 @@ import pytest
 
 from repro.sparse import random as sprand
 from repro.sparse.formats import CSR, spgemm_dense_oracle
-from repro.core import binning, csr, distributed, plan as plan_mod
+from repro.core import binning, csr, oracle, plan as plan_mod
 from repro.core import predictor, spgemm
 
 
@@ -123,15 +123,29 @@ def test_default_session_cache_is_used():
 # --------------------------------------------------------------------------- #
 # per-shard capacity sizing: the hub-row regression (satellite of ISSUE 3)
 # --------------------------------------------------------------------------- #
+def _legacy_global_pad_slots(a, num_shards=4, safety=1.3):
+    """The retired global-pad sizing rule (``benchmarks/legacy_distributed``):
+    every shard allocates rows_per_shard × ONE global row capacity sized by
+    the worst predicted row in the whole matrix — inlined here so the
+    regression pin survives the legacy path leaving the library."""
+    flopr, _ = oracle.flop_per_row(a, a)
+    pred = oracle.proposed_predict(a, a, seed=0)
+    from repro.core import partition
+    part = partition.balanced_contiguous(pred.structure, num_shards)
+    rows_per_shard = int(max(np.diff(part.bounds).max(), 1))
+    cap = int(min(np.ceil(pred.structure.max() * safety), flopr.max()))
+    cap = max(8, -(-cap // 8) * 8)
+    return rows_per_shard * cap
+
+
 def test_hub_row_no_longer_inflates_other_shards_buffers():
-    """Legacy ``plan_distributed`` sized EVERY shard's buffers from the
+    """The legacy global-pad path sized EVERY shard's buffers from the
     global max predicted row, so one hub row inflated all shards.  The
     unified plan isolates the hub in its own bucket: every other bucket's
     capacity is sized by its own rows, and the per-shard footprint drops by
     an order of magnitude."""
     a = _hub_matrix()
-    legacy = distributed.plan_distributed(a, a, num_shards=4)
-    legacy_slots = legacy.row_table.shape[1] * legacy.row_capacity
+    legacy_slots = _legacy_global_pad_slots(a, num_shards=4)
 
     p = plan_mod.plan_spgemm(a, a, num_shards=4, safety=1.3)
     new_slots = p.shard_slots()
