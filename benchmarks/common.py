@@ -48,10 +48,20 @@ def reset_records() -> None:
 
 def write_bench_json(path: str, extra: dict | None = None) -> None:
     """Persist every emitted record (+ optional extra sections) as JSON —
-    the cross-PR perf trajectory artifact (BENCH_kernels.json)."""
+    the cross-PR perf trajectory artifact (BENCH_kernels.json).
+
+    The write is atomic (temp file + ``os.replace`` in the target dir): a
+    bench that dies mid-write leaves the previous artifact intact instead
+    of a truncated JSON that poisons the perf trajectory."""
     payload = dict(records=list(RECORDS))
     if extra:
         payload.update(extra)
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
-        f.write("\n")
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)

@@ -158,6 +158,8 @@ def _replan_sweep(fam: str, m: int) -> dict:
     out_a = plan_mod.execute(p_a, a, b, cache=plan_mod.PlanCache())
     t_ample = time.perf_counter() - t0
 
+    stats_u, stats_a = p_u.stats(), p_a.stats()
+    json.dumps([stats_u, stats_a])   # stats must stay JSON-serializable
     return dict(
         retry_rounds=p_u.retries,
         retried_buckets=len(p_u.retry_events),
@@ -167,6 +169,12 @@ def _replan_sweep(fam: str, m: int) -> dict:
         ample_us=round(t_ample * 1e6, 1),
         retry_premium=round(t_under / max(t_ample, 1e-12), 3),
         ample_retries=p_a.retries,
+        # §9 containment counters: the happy path must never degrade to the
+        # exact-symbolic fallback (ample) and the legacy ladder must close
+        # every overflow on its own (under-allocated, surface mode)
+        degradations_under=len(stats_u["degradations"]),
+        degradations_ample=len(stats_a["degradations"]),
+        validation=stats_a["validation"],
     )
 
 
@@ -225,6 +233,12 @@ def main(argv=None) -> int:
             ok = False
         if s["replan"]["overflow_after"]:
             print(f"FAIL: {fam} retry loop left overflow")
+            ok = False
+        if s["replan"]["degradations_ample"] or \
+                s["replan"]["degradations_under"]:
+            print(f"FAIL: {fam} happy path hit the exact-symbolic fallback "
+                  f"(under={s['replan']['degradations_under']}, "
+                  f"ample={s['replan']['degradations_ample']})")
             ok = False
         # every family must reach 100% reuse / zero retraces once its
         # template stops growing (pow2-key reuse without a template is

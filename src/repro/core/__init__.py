@@ -9,7 +9,7 @@
 def __getattr__(name):
     if name in ("plan_spgemm", "execute", "reassemble", "plan_cache",
                 "SpgemmPlan", "PlanCache", "DistSpgemmOut", "PlanTemplate",
-                "TemplateRegistry", "template_registry"):
+                "TemplateRegistry", "template_registry", "RetryPolicy"):
         from . import plan as _plan
         return getattr(_plan, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -377,7 +377,8 @@ def build_plan(a, b, *, lane_budget: int = DEFAULT_LANE_BUDGET,
     way, see DESIGN.md §5).
     """
     if route not in ("auto",) + ROUTES:
-        raise ValueError(f"unknown route {route!r}")
+        from .errors import PlanMismatchError
+        raise PlanMismatchError(f"unknown route {route!r}")
     a_rpt = np.asarray(a.rpt)
     a_col = np.asarray(a.col)
     b_rpt = np.asarray(b.rpt)

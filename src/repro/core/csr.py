@@ -112,7 +112,11 @@ def pad_row_ids(rows: jax.Array, multiple: int) -> jax.Array:
 
 def to_device(host: CSR, capacity: int | None = None) -> CSRDevice:
     cap = int(capacity if capacity is not None else host.nnz)
-    assert cap >= host.nnz, (cap, host.nnz)
+    if cap < host.nnz:
+        from .errors import PlanMismatchError
+        raise PlanMismatchError(
+            f"device capacity {cap} is smaller than the operand's nnz "
+            f"{host.nnz}", observed=int(host.nnz), planned=cap)
     col = np.full(cap, COL_SENTINEL, dtype=np.int32)
     val = np.zeros(cap, dtype=np.float32)
     col[: host.nnz] = host.col

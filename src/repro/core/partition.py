@@ -104,6 +104,11 @@ def column_panels(b, n_panels: int, *, quantize: bool = False
     ``quantize`` snaps the interior edges to the pow2 grid so same-family
     different-seed matrices land on identical panel keys (the §7 plan-cache
     quantization knob, extended to panels)."""
+    if int(n_panels) < 1:
+        from .errors import PlanMismatchError
+        raise PlanMismatchError(
+            f"column_panels needs n_panels >= 1, got {n_panels}",
+            observed=int(n_panels), planned=1)
     ncols = int(b.shape[1])
     counts = np.bincount(np.asarray(b.col, dtype=np.int64),
                          minlength=max(1, ncols)).astype(np.float64)

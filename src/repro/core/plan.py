@@ -76,10 +76,14 @@ from jax.experimental.shard_map import shard_map
 from repro.sparse.formats import CSR
 from . import binning as binning_mod
 from . import csr as csr_mod
+from . import faults as faults_mod
 from . import oracle
 from . import partition as part_mod
 from . import predictor as predictor_mod
+from . import validate as validate_mod
 from .csr import COL_SENTINEL, CSRDevice
+from .errors import (CapacityExhaustedError, OperandValidationError,
+                     PlanMismatchError, ShardFailureError, SpgemmError)
 from .spgemm import (SpGEMMOut, PanelSpgemmOut, pad_to_capacity,
                      routed_spgemm_rows)
 
@@ -132,6 +136,59 @@ def plan_cache() -> PlanCache:
 
 
 # --------------------------------------------------------------------------- #
+# Retry escalation policy (DESIGN.md §9)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry escalation for the overflow re-planning loop.
+
+    Replaces the raw ``retry_safety``/``max_retries`` pair: ``rounds``
+    pow2-bump ladder rounds (``×growth^attempt``, floored at the observed
+    need) with an optional per-round capacity ceiling ``max_capacity``;
+    when the ladder exhausts (no budget, or every bump ceiling-clamped)
+    and ``exact_fallback`` is on, the loop escalates ONCE to an exact
+    symbolic count (``predictor.exact_row_counts``) for only the offending
+    (bucket × panel) units — guaranteed termination in ≤ ``rounds``+1
+    re-execute waves with bitwise-correct output, recorded in
+    ``plan.stats()["degradations"]``.  Residual overflow after that (only
+    possible with the fallback off) follows ``on_exhausted``: ``"raise"``
+    surfaces a typed :class:`~repro.core.errors.CapacityExhaustedError`
+    (distributed: :class:`~repro.core.errors.ShardFailureError` naming the
+    shard/panel); ``"surface"`` is the legacy behavior — overflow stays on
+    the result and :func:`reassemble` raises.
+    """
+
+    rounds: int = 4
+    growth: float = 1.5
+    max_capacity: int | None = None
+    exact_fallback: bool = True
+    on_exhausted: str = "raise"       # "raise" | "surface"
+
+    def __post_init__(self):
+        if self.rounds < 0:
+            raise PlanMismatchError(f"RetryPolicy.rounds must be >= 0, got "
+                                    f"{self.rounds}")
+        if self.on_exhausted not in ("raise", "surface"):
+            raise PlanMismatchError(
+                f"RetryPolicy.on_exhausted must be 'raise' or 'surface', "
+                f"got {self.on_exhausted!r}")
+
+    def clamp(self, cap: int, new_cap: int) -> int:
+        """Apply the per-round ceiling; never shrink below the current cap."""
+        if self.max_capacity is None:
+            return new_cap
+        return min(new_cap, max(int(self.max_capacity), cap))
+
+
+def _plan_key_id(plan) -> str | None:
+    """Short stable fingerprint of ``plan.key`` for error context."""
+    try:
+        return format(hash(plan.key) & 0xFFFFFFFF, "08x")
+    except Exception:
+        return None
+
+
+# --------------------------------------------------------------------------- #
 # Plan dataclasses
 # --------------------------------------------------------------------------- #
 @dataclasses.dataclass(frozen=True)
@@ -176,6 +233,12 @@ class SpgemmPlan:
     max_retries: int = 4
     retries: int = 0                # rounds the last execute() needed
     retry_events: list = dataclasses.field(default_factory=list)  # last execute()
+    # failure containment (DESIGN.md §9)
+    retry_policy: "RetryPolicy | None" = None   # None → re-planning off
+    degradations: list = dataclasses.field(default_factory=list)  # last execute()
+    validation: dict = dataclasses.field(
+        default_factory=lambda: dict(operands_validated=0,
+                                     fingerprint_checks=0))
     # distributed-only (num_shards == 0 → single device)
     num_shards: int = 0
     axis: str = "data"
@@ -312,12 +375,17 @@ class SpgemmPlan:
         """Convert one operand at the plan's padded device capacity."""
         cap = self.cap_a if which == "a" else self.cap_b
         shape = self.shape_a if which == "a" else self.shape_b
+        validate_mod.validate_csr(m, name=which)
         if m.shape != shape:
-            raise ValueError(f"operand {which} shape {m.shape} != planned "
-                             f"{shape}")
+            raise PlanMismatchError(
+                f"operand {which} shape {m.shape} != planned {shape}",
+                operand=which, observed=list(m.shape), planned=list(shape),
+                plan_key=_plan_key_id(self))
         if m.nnz > cap:
-            raise ValueError(f"operand {which} nnz {m.nnz} exceeds planned "
-                             f"device capacity {cap}")
+            raise PlanMismatchError(
+                f"operand {which} nnz {m.nnz} exceeds planned device "
+                f"capacity {cap}", operand=which, observed=int(m.nnz),
+                planned=int(cap), plan_key=_plan_key_id(self))
         return csr_mod.to_device(m, capacity=cap)
 
     def stats(self) -> dict:
@@ -363,6 +431,14 @@ class SpgemmPlan:
             if self.distributed:
                 out.update(row_shards=self.row_shards,
                            comm=self.comm_stats())
+        # failure-containment counters (DESIGN.md §9) — always present so
+        # observability dashboards need no schema branching; every value is
+        # JSON-serializable by construction.
+        out.update(
+            retries=int(self.retries),
+            degradations=[dict(e) for e in self.degradations],
+            validation=dict(self.validation),
+        )
         return out
 
     def comm_stats(self) -> dict:
@@ -370,7 +446,9 @@ class SpgemmPlan:
         vs the replicated-B executor — the §8 acceptance metric
         (``benchmarks/comm_bench.py`` → ``BENCH_comm.json``)."""
         if not (self.n_panels and self.distributed):
-            raise ValueError("comm_stats needs a distributed panel plan")
+            raise PlanMismatchError(
+                "comm_stats needs a distributed panel plan",
+                plan_key=_plan_key_id(self))
         pg = self._panel_gather
         # index+value bytes per entry (int32 col + float32 val) + rpt words
         rep_bytes = self.cap_b * 8 + (self.shape_b[0] + 1) * 4
@@ -443,10 +521,13 @@ class PlanTemplate:
     @staticmethod
     def from_plan(plan: "SpgemmPlan") -> "PlanTemplate":
         if not plan.pop_quant:
-            raise ValueError("templates require a pop_quant=True plan")
+            raise PlanMismatchError("templates require a pop_quant=True plan",
+                                    plan_key=_plan_key_id(plan))
         if plan.distributed:
-            raise ValueError("build templates from a single-device plan; "
-                             "pass mesh to plan_spgemm(template=...) instead")
+            raise PlanMismatchError(
+                "build templates from a single-device plan; "
+                "pass mesh to plan_spgemm(template=...) instead",
+                plan_key=_plan_key_id(plan))
         return PlanTemplate(
             plan.shape_a, plan.shape_b, plan.cap_a, plan.cap_b,
             plan.use_kernel, plan.safety,
@@ -491,8 +572,11 @@ class PlanTemplate:
         the member's :class:`~repro.core.binning.BinningPlan` carrying the
         template's static bounds."""
         if a.shape != self.shape_a or b.shape != self.shape_b:
-            raise ValueError(f"member shapes {a.shape}/{b.shape} do not "
-                             f"match template {self.shape_a}/{self.shape_b}")
+            raise PlanMismatchError(
+                f"member shapes {a.shape}/{b.shape} do not match template "
+                f"{self.shape_a}/{self.shape_b}",
+                observed=[list(a.shape), list(b.shape)],
+                planned=[list(self.shape_a), list(self.shape_b)])
         a_rpt = np.asarray(a.rpt)
         a_col = np.asarray(a.col)
         b_rpt = np.asarray(b.rpt)
@@ -829,12 +913,22 @@ def _build_panel_gather(a: CSR, pslices, bounds, row_shards: int,
     ecap = max(8, max((c.size for c in sel_cols), default=0))
     if pop_quant:
         ecap = binning_mod.ceil_pow2(ecap)
+    # fault-injection hook (core.faults): no-op unless a test armed gather
+    # starvation — an under-sized entry cap is DETECTED below, never written
+    # past (the typed error replaces a silent out-of-bounds fill)
+    ecap = faults_mod.scale_gather_cap(ecap)
     g_rpt = np.zeros((d_total, nref + 1), dtype=np.int32)
     g_col = np.full((d_total, ecap), COL_SENTINEL, dtype=np.int32)
     g_idx = np.full((d_total, ecap), -1, dtype=np.int64)
     ref_nnz = np.zeros(d_total, dtype=np.int64)
     for d in range(d_total):
         e = sel_cols[d].size
+        if e > ecap:
+            raise ShardFailureError(
+                f"panel gather entry capacity {ecap} cannot hold the "
+                f"{e} entries device {d} references",
+                shard=d // n_panels, panel=d % n_panels,
+                observed=int(e), planned=int(ecap))
         np.cumsum(sel_cnt[d], out=g_rpt[d, 1:])
         g_col[d, :e] = sel_cols[d]
         g_idx[d, :e] = sel_idx[d]
@@ -878,6 +972,8 @@ def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
                 deg_align: int = 1, pop_quant: bool = False,
                 retry_safety: float = 0.0,
                 max_retries: int = 4,
+                retry_policy: "RetryPolicy | None" = None,
+                validate: bool = True,
                 template: "PlanTemplate | str | None" = None,
                 registry: "TemplateRegistry | None" = None,
                 n_panels: int = 0) -> SpgemmPlan:
@@ -913,10 +1009,25 @@ def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
     the gathered panel entries its rows reference, replacing full B
     replication (``num_shards`` must be a multiple of ``n_panels``).
     """
-    assert a.ncols == b.nrows, (a.shape, b.shape)
+    operands_validated = 0
+    if validate:
+        validate_mod.validate_pair(a, b)
+        operands_validated = 2
+    elif a.ncols != b.nrows:
+        raise OperandValidationError(
+            f"operand shapes {a.shape} and {b.shape} are incompatible "
+            f"for A·B", observed=int(b.nrows), planned=int(a.ncols))
+    if retry_policy is None and retry_safety > 0:
+        # legacy knobs: the raw pair maps onto a ladder-only policy with the
+        # pre-§9 surface-overflow behavior, so existing callers keep their
+        # exact semantics
+        retry_policy = RetryPolicy(rounds=int(max_retries),
+                                   growth=float(retry_safety),
+                                   exact_fallback=False,
+                                   on_exhausted="surface")
     if isinstance(template, str):
         if template != "auto":
-            raise ValueError(f"unknown template mode {template!r}")
+            raise PlanMismatchError(f"unknown template mode {template!r}")
         reg = registry if registry is not None else _DEFAULT_REGISTRY
         template = reg.get_or_create(a, b, lambda: PlanTemplate.from_plan(
             plan_spgemm(a, b, seed=seed, safety=safety, route=route,
@@ -925,9 +1036,10 @@ def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
     if n_panels and (mesh is not None or num_shards):
         shards_chk = int(num_shards if num_shards else mesh.shape[axis])
         if shards_chk % int(n_panels):
-            raise ValueError(
+            raise PlanMismatchError(
                 f"n_panels={n_panels} must divide the mesh axis size "
-                f"{shards_chk} (panels fold onto the data axis)")
+                f"{shards_chk} (panels fold onto the data axis)",
+                observed=int(shards_chk), planned=int(n_panels))
     if template is not None:
         pop_quant = True
         template.grow_device_caps(a.nnz, b.nnz)
@@ -968,6 +1080,10 @@ def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
             structure = flopr.astype(np.float64)
             predicted_nnz = float(total_flop)
             cr = 1.0
+        # fault-injection hook (core.faults): no-op unless a test armed
+        # sketch corruption — models an unlucky sample end to end
+        structure, predicted_nnz, cr = faults_mod.corrupt_sketch(
+            structure, predicted_nnz, cr)
     else:
         structure = np.zeros(a.nrows, dtype=np.float64)
         predicted_nnz = 0.0
@@ -991,8 +1107,13 @@ def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
         predicted_nnz=predicted_nnz, compression_ratio=cr,
         sample_rows=sample_rows, shape_a=a.shape, shape_b=b.shape,
         cap_a=cap_a, cap_b=cap_b, safety=safety, use_kernel=use_kernel,
-        pop_quant=pop_quant, retry_safety=retry_safety,
-        max_retries=max_retries)
+        pop_quant=pop_quant,
+        retry_safety=(retry_policy.growth if retry_policy is not None
+                      else retry_safety),
+        max_retries=(retry_policy.rounds if retry_policy is not None
+                     else max_retries),
+        retry_policy=retry_policy)
+    plan.validation["operands_validated"] = operands_validated
     if template is not None:
         plan._template = template
         plan._pop_override = tuple(template.pops)
@@ -1091,7 +1212,8 @@ def plan_spgemm(a: CSR, b: CSR, *, mesh=None, num_shards: int | None = None,
                            for row in pc], dtype=np.int64).reshape(pc.shape)
         plan.panel_caps = pc.astype(np.int64)
         plan._panel_caps_dev = tuple(
-            _device_capacity(int(n)) for n in panels.panel_nnz)
+            faults_mod.scale_gather_cap(_device_capacity(int(n)))
+            for n in panels.panel_nnz)
     return plan
 
 
@@ -1283,8 +1405,14 @@ def _panel_operands_local(plan: SpgemmPlan, b: CSR) -> list:
     per execute — the serving pair reuses executors AND index uploads."""
     if plan._panel_dev is None:
         structs = []
-        for (prpt, pcol, _), cap in zip(plan._panel_host,
-                                        plan._panel_caps_dev):
+        for p, ((prpt, pcol, _), cap) in enumerate(
+                zip(plan._panel_host, plan._panel_caps_dev)):
+            if pcol.size > cap:
+                raise CapacityExhaustedError(
+                    f"panel {p} operand capacity {cap} cannot hold its "
+                    f"{pcol.size} entries", panel=p,
+                    observed=int(pcol.size), planned=int(cap),
+                    plan_key=_plan_key_id(plan))
             col = np.full(cap, COL_SENTINEL, dtype=np.int32)
             col[:pcol.size] = pcol
             structs.append((jnp.asarray(prpt, dtype=jnp.int32),
@@ -1320,17 +1448,20 @@ def _check_panel_operand(plan: SpgemmPlan, m, which: str = "b") -> CSR:
     the planned operand's."""
     shape = plan.shape_b if which == "b" else plan.shape_a
     fp = plan._panel_b_fp if which == "b" else plan._panel_a_fp
+    plan.validation["fingerprint_checks"] += 1
     if not isinstance(m, CSR):
-        raise TypeError(
+        raise PlanMismatchError(
             f"panel plans bake operand {which}'s structure into the gather "
-            "maps — pass the host CSR operand, not a CSRDevice")
+            "maps — pass the host CSR operand, not a CSRDevice",
+            operand=which, plan_key=_plan_key_id(plan))
     m_fp = (int(m.nnz), int(np.asarray(m.col, dtype=np.int64).sum()))
     if m.shape != shape or m_fp != fp:
-        raise ValueError(
+        raise PlanMismatchError(
             f"operand {which} shape/structure {m.shape}/nnz={m.nnz} does "
             f"not match the planned operand ({shape}/nnz={fp[0]}) — the "
             "panel gather map is structure-specific; re-plan for a new "
-            "sparsity pattern")
+            "sparsity pattern", operand=which, observed=list(m_fp),
+            planned=list(fp), plan_key=_plan_key_id(plan))
     return m
 
 
@@ -1343,10 +1474,13 @@ def _coerce_one(plan: SpgemmPlan, m, which: str, idx: int) -> CSRDevice:
         # distinct nnz (voiding the zero-retrace serving contract) —
         # or worse, compute a different matrix without complaint
         if m.shape != shape or m.capacity != cap:
-            raise ValueError(
+            raise PlanMismatchError(
                 f"operand {which}: CSRDevice shape/capacity "
                 f"{m.shape}/{m.capacity} does not match the plan's "
-                f"{shape}/{cap} — convert with plan.to_device()")
+                f"{shape}/{cap} — convert with plan.to_device()",
+                operand=which, observed=[list(m.shape), int(m.capacity)],
+                planned=[list(shape), int(cap)],
+                plan_key=_plan_key_id(plan))
         return m
     if plan._planned_pair is not None and m is plan._planned_pair[0][idx]:
         return plan._planned_pair[1][idx]
@@ -1358,8 +1492,10 @@ def _coerce_pair(plan: SpgemmPlan, a, b) -> tuple[CSRDevice, CSRDevice]:
 
 
 # --------------------------------------------------------------------------- #
-# Overflow re-planning (DESIGN.md §7): bump ONLY the overflowing buckets'
-# capacities and re-execute them — the realloc half of the paper's story.
+# Overflow re-planning (DESIGN.md §7) + retry escalation (§9): bump ONLY the
+# overflowing buckets' capacities and re-execute them — the realloc half of
+# the paper's story; when the ladder exhausts, escalate once to an exact
+# symbolic count for the offending units.
 # --------------------------------------------------------------------------- #
 def _bumped_capacity(cap: int, need: int, retry_safety: float,
                      attempt: int) -> int:
@@ -1370,8 +1506,40 @@ def _bumped_capacity(cap: int, need: int, retry_safety: float,
     return binning_mod.ceil_pow2(max(need, sched, cap + 1))
 
 
+def _policy_of(plan: SpgemmPlan) -> RetryPolicy:
+    """The plan's escalation policy (legacy ``retry_safety``/``max_retries``
+    fields resolve to a ladder-only, surface-overflow policy)."""
+    if plan.retry_policy is not None:
+        return plan.retry_policy
+    return RetryPolicy(rounds=int(plan.max_retries),
+                       growth=float(plan.retry_safety) or 1.5,
+                       exact_fallback=False, on_exhausted="surface")
+
+
+def _exact_capacity(need: int, cap: int) -> int:
+    """Guaranteed-sufficient pow2 capacity for the exact-symbolic fallback
+    (never below the current cap — splicing only widens buffers)."""
+    return binning_mod.ceil_pow2(max(8, int(need), int(cap)))
+
+
+def _invoke_executor(run, info: dict, *args):
+    """Every executor dispatch funnels here: the fault-injection hook
+    (``core.faults.check_executor``) fires pre-dispatch, and any exception
+    out of the executor — injected or real — surfaces as a typed
+    :class:`ShardFailureError` naming the dispatch unit instead of an
+    anonymous traceback from inside a jitted program."""
+    try:
+        faults_mod.check_executor(info)
+        return run(*args)
+    except SpgemmError:
+        raise
+    except Exception as e:
+        raise ShardFailureError(f"executor failed: {e}", **info) from e
+
+
 def _replan_local(plan: SpgemmPlan, ad, bd, out: SpGEMMOut,
                   cache: PlanCache) -> SpGEMMOut:
+    policy = _policy_of(plan)
     buckets = plan.binning.buckets
     caps = list(plan.alloc.bucket_capacities)
     n = np.asarray(out.row_nnz, dtype=np.int64)
@@ -1380,44 +1548,90 @@ def _replan_local(plan: SpgemmPlan, ad, bd, out: SpGEMMOut,
     tables = args[1 + len(buckets):] if plan.pop_quant else args[1:]
     plan.retries = 0
     plan.retry_events = []             # observability covers the LAST execute
-    for attempt in range(1, plan.max_retries + 1):
-        over = [i for i, bk in enumerate(buckets)
-                if bk.n_rows and int(n[bk.rows].max()) > caps[i]]
-        if not over:
+    plan.degradations = []
+
+    def splice(i, new_cap, c2, v2):
+        nonlocal col, val
+        bk = buckets[i]
+        c2 = np.asarray(c2)[:bk.n_rows]
+        v2 = np.asarray(v2)[:bk.n_rows]
+        if new_cap > col.shape[1]:
+            grow = new_cap - col.shape[1]
+            col = np.concatenate(
+                [col, np.full((col.shape[0], grow), COL_SENTINEL,
+                              np.int32)], axis=1)
+            val = np.concatenate(
+                [val, np.zeros((val.shape[0], grow), np.float32)], axis=1)
+        col[bk.rows, :new_cap] = c2
+        val[bk.rows, :new_cap] = v2
+
+    def rerun(i, new_cap, unit):
+        bk = buckets[i]
+        meta = _bucket_meta(bk, new_cap)
+        pop = int(tables[i].shape[0])
+        run = cache.executor(
+            ("bucket-retry", plan.shape_a, plan.shape_b, plan.cap_a,
+             plan.cap_b, plan.use_kernel, meta, pop),
+            lambda m=meta: _build_bucket_executor(m, plan.use_kernel,
+                                                 cache))
+        c2, v2, _, _ = _invoke_executor(run, dict(unit=unit, bucket=i),
+                                        ad, bd, tables[i])
+        splice(i, new_cap, c2, v2)
+
+    for attempt in range(1, policy.rounds + 1):
+        bumps = []
+        for i, bk in enumerate(buckets):
+            if not bk.n_rows:
+                continue
+            need = int(n[bk.rows].max())
+            if need <= caps[i]:
+                continue
+            new_cap = policy.clamp(
+                caps[i], _bumped_capacity(caps[i], need, policy.growth,
+                                          attempt))
+            if new_cap > caps[i]:      # ceiling-clamped units wait for the
+                bumps.append((i, need, new_cap))   # exact fallback instead
+        if not bumps:
             break
         if col is None:
             col = np.asarray(out.col).copy()
             val = np.asarray(out.val).copy()
         plan.retries = attempt
-        for i in over:
-            bk = buckets[i]
-            need = int(n[bk.rows].max())
-            new_cap = _bumped_capacity(caps[i], need, plan.retry_safety,
-                                       attempt)
-            meta = _bucket_meta(bk, new_cap)
-            pop = int(tables[i].shape[0])
-            run = cache.executor(
-                ("bucket-retry", plan.shape_a, plan.shape_b, plan.cap_a,
-                 plan.cap_b, plan.use_kernel, meta, pop),
-                lambda m=meta: _build_bucket_executor(m, plan.use_kernel,
-                                                     cache))
-            c2, v2, _, _ = run(ad, bd, tables[i])
-            c2 = np.asarray(c2)[:bk.n_rows]
-            v2 = np.asarray(v2)[:bk.n_rows]
-            if new_cap > col.shape[1]:
-                grow = new_cap - col.shape[1]
-                col = np.concatenate(
-                    [col, np.full((col.shape[0], grow), COL_SENTINEL,
-                                  np.int32)], axis=1)
-                val = np.concatenate(
-                    [val, np.zeros((val.shape[0], grow), np.float32)], axis=1)
-            col[bk.rows, :new_cap] = c2
-            val[bk.rows, :new_cap] = v2
+        for i, need, new_cap in bumps:
+            rerun(i, new_cap, "bucket-retry")
             plan.retry_events.append(dict(
                 round=attempt, bucket=i, old_cap=caps[i], new_cap=new_cap,
                 need=need))
             caps[i] = new_cap
+    # ladder exhausted (no rounds left, or every bump ceiling-clamped):
+    # escalate ONCE to an exact symbolic count for the offending buckets —
+    # guaranteed-sufficient caps, bitwise-correct output (DESIGN.md §9)
+    over = [i for i, bk in enumerate(buckets)
+            if bk.n_rows and int(n[bk.rows].max()) > caps[i]]
+    if over and policy.exact_fallback:
+        if col is None:
+            col = np.asarray(out.col).copy()
+            val = np.asarray(out.val).copy()
+        for i in over:
+            bk = buckets[i]
+            counts = predictor_mod.exact_row_counts(
+                ad, bd, bk.rows, max_deg_a=bk.deg_a, max_deg_b=bk.deg_b,
+                route=bk.route, span=bk.span)
+            need = int(counts.max(initial=1))
+            new_cap = _exact_capacity(need, caps[i] + 1)
+            rerun(i, new_cap, "exact-fallback")
+            plan.degradations.append(dict(
+                kind="exact_symbolic", bucket=i, old_cap=int(caps[i]),
+                new_cap=int(new_cap), need=int(need)))
+            caps[i] = new_cap
     if col is None:
+        if over and policy.on_exhausted == "raise":
+            raise CapacityExhaustedError(
+                f"retry escalation exhausted with {int(out.overflow)} "
+                f"entries still dropped (buckets {over})", buckets=over,
+                observed=int(out.overflow),
+                planned=[int(caps[i]) for i in over],
+                plan_key=_plan_key_id(plan))
         return out                     # fast path: nothing overflowed
     # final capacities + overflow recomputed against the bumped plan
     capv = np.zeros(n.shape[0], dtype=np.int64)
@@ -1430,12 +1644,20 @@ def _replan_local(plan: SpgemmPlan, ad, bd, out: SpGEMMOut,
         safety=plan.alloc.safety)
     if plan._template is not None:
         plan._template.grow_caps(caps)   # the family learns from the miss
+    if overflow and policy.on_exhausted == "raise":
+        bad = [i for i, bk in enumerate(buckets)
+               if bk.n_rows and int(n[bk.rows].max()) > caps[i]]
+        raise CapacityExhaustedError(
+            f"retry escalation exhausted with {overflow} entries still "
+            f"dropped (buckets {bad})", buckets=bad, observed=int(overflow),
+            planned=[int(caps[i]) for i in bad], plan_key=_plan_key_id(plan))
     return SpGEMMOut(jnp.asarray(col), jnp.asarray(val), out.row_nnz,
                      jnp.int32(overflow))
 
 
 def _replan_dist(plan: SpgemmPlan, ad, bd, out: DistSpgemmOut,
                  cache: PlanCache, mesh) -> DistSpgemmOut:
+    policy = _policy_of(plan)
     buckets = plan.binning.buckets
     tables = list(plan.shard_tables)
     nnzs = [np.asarray(x, dtype=np.int64) for x in out.row_nnz]
@@ -1443,32 +1665,71 @@ def _replan_dist(plan: SpgemmPlan, ad, bd, out: DistSpgemmOut,
     args = plan.device_args()
     plan.retries = 0
     plan.retry_events = []             # observability covers the LAST execute
-    for attempt in range(1, plan.max_retries + 1):
-        over = [i for i, t in enumerate(tables)
-                if int(np.where(t.valid, nnzs[i], 0).max(initial=0))
-                > t.capacity]
-        if not over:
+    plan.degradations = []
+    changed = False
+
+    def rerun(i, new_cap, unit):
+        t = tables[i]
+        meta = _bucket_meta(buckets[i], new_cap)
+        run = cache.executor(
+            ("bucket-retry-dist", plan.shape_a, plan.shape_b, plan.cap_a,
+             plan.cap_b, plan.use_kernel, meta, t.rows_pb, plan.axis,
+             _mesh_key(mesh)),
+            lambda m=meta: _build_bucket_dist_executor(
+                m, mesh, plan.axis, plan.use_kernel, cache))
+        c2, v2, _ = _invoke_executor(run, dict(unit=unit, bucket=i),
+                                     ad, bd, args[i])
+        cols[i], vals[i] = c2, v2
+        tables[i] = dataclasses.replace(t, capacity=new_cap)
+
+    for attempt in range(1, policy.rounds + 1):
+        bumps = []
+        for i, t in enumerate(tables):
+            need = int(np.where(t.valid, nnzs[i], 0).max(initial=0))
+            if need <= t.capacity:
+                continue
+            new_cap = policy.clamp(
+                t.capacity, _bumped_capacity(t.capacity, need, policy.growth,
+                                             attempt))
+            if new_cap > t.capacity:
+                bumps.append((i, need, new_cap))
+        if not bumps:
             break
         plan.retries = attempt
-        for i in over:
-            t = tables[i]
-            need = int(np.where(t.valid, nnzs[i], 0).max())
-            new_cap = _bumped_capacity(t.capacity, need, plan.retry_safety,
-                                       attempt)
-            meta = _bucket_meta(buckets[i], new_cap)
-            run = cache.executor(
-                ("bucket-retry-dist", plan.shape_a, plan.shape_b, plan.cap_a,
-                 plan.cap_b, plan.use_kernel, meta, t.rows_pb, plan.axis,
-                 _mesh_key(mesh)),
-                lambda m=meta: _build_bucket_dist_executor(
-                    m, mesh, plan.axis, plan.use_kernel, cache))
-            c2, v2, _ = run(ad, bd, args[i])
-            cols[i], vals[i] = c2, v2
+        changed = True
+        for i, need, new_cap in bumps:
+            old_cap = tables[i].capacity
+            rerun(i, new_cap, "bucket-retry")
             plan.retry_events.append(dict(
-                round=attempt, bucket=i, old_cap=t.capacity,
+                round=attempt, bucket=i, old_cap=old_cap,
                 new_cap=new_cap, need=need))
-            tables[i] = dataclasses.replace(t, capacity=new_cap)
-    if plan.retries == 0:
+    # exact-symbolic escalation for units the ladder could not cover (§9)
+    over = [i for i, t in enumerate(tables)
+            if int(np.where(t.valid, nnzs[i], 0).max(initial=0)) > t.capacity]
+    if over and policy.exact_fallback:
+        changed = True
+        for i in over:
+            bk = buckets[i]
+            counts = predictor_mod.exact_row_counts(
+                ad, bd, bk.rows, max_deg_a=bk.deg_a, max_deg_b=bk.deg_b,
+                route=bk.route, span=bk.span)
+            need = int(counts.max(initial=1))
+            old_cap = tables[i].capacity
+            new_cap = _exact_capacity(need, old_cap + 1)
+            rerun(i, new_cap, "exact-fallback")
+            plan.degradations.append(dict(
+                kind="exact_symbolic", bucket=i, old_cap=int(old_cap),
+                new_cap=int(new_cap), need=int(need)))
+    if not changed:
+        if over and policy.on_exhausted == "raise":
+            shards = [int(s) for s in
+                      np.flatnonzero(np.asarray(out.shard_overflow))]
+            raise ShardFailureError(
+                f"retry escalation exhausted with "
+                f"{int(np.asarray(out.shard_overflow).sum())} entries still "
+                f"dropped on shards {shards}", shards=shards, buckets=over,
+                observed=int(np.asarray(out.shard_overflow).sum()),
+                plan_key=_plan_key_id(plan))
         return out                     # fast path: nothing overflowed
     plan.shard_tables = tuple(tables)  # reassemble reads the final widths
     if plan._template is not None:
@@ -1479,6 +1740,12 @@ def _replan_dist(plan: SpgemmPlan, ad, bd, out: DistSpgemmOut,
     for t, n in zip(tables, nnzs):
         overflow += np.where(t.valid,
                              np.maximum(n - t.capacity, 0), 0).sum(axis=1)
+    if overflow.sum() and policy.on_exhausted == "raise":
+        shards = [int(s) for s in np.flatnonzero(overflow)]
+        raise ShardFailureError(
+            f"retry escalation exhausted with {int(overflow.sum())} entries "
+            f"still dropped on shards {shards}", shards=shards,
+            observed=int(overflow.sum()), plan_key=_plan_key_id(plan))
     return DistSpgemmOut(tuple(cols), tuple(vals), out.row_nnz, overflow)
 
 
@@ -1488,6 +1755,7 @@ def _replan_local_panels(plan: SpgemmPlan, ad, bps, out: PanelSpgemmOut,
     an overflow in one panel of one bucket re-executes ONLY that block (the
     other panels' outputs are reused verbatim), spliced by whole-block
     replacement since panel blocks are independent."""
+    policy = _policy_of(plan)
     buckets = plan.binning.buckets
     npan = plan.n_panels
     caps = np.asarray(plan.panel_caps, dtype=np.int64).copy()
@@ -1499,34 +1767,75 @@ def _replan_local_panels(plan: SpgemmPlan, ad, bps, out: PanelSpgemmOut,
     tables = args[1 + len(buckets):] if plan.pop_quant else args[1:]
     plan.retries = 0
     plan.retry_events = []
-    for attempt in range(1, plan.max_retries + 1):
-        over = [(i, p) for i, bk in enumerate(buckets) if bk.n_rows
-                for p in range(npan)
-                if int(nnzs[i][p][:bk.n_rows].max(initial=0)) > caps[i, p]]
-        if not over:
+    plan.degradations = []
+    changed = False
+
+    def rerun(i, p, new_cap, unit):
+        bk = buckets[i]
+        meta = _panel_meta(bk, plan.panel_deg_b[i], new_cap)
+        pop = int(tables[i].shape[0])
+        run = cache.executor(
+            ("bucket-retry-panel", plan.shape_a, plan.shape_b,
+             plan.cap_a, plan._panel_caps_dev[p], plan.use_kernel, meta,
+             pop),
+            lambda m=meta: _build_bucket_executor(m, plan.use_kernel,
+                                                  cache))
+        c2, v2, _, _ = _invoke_executor(
+            run, dict(unit=unit, bucket=i, panel=p), ad, bps[p], tables[i])
+        cols[i][p] = c2
+        vals[i][p] = v2
+
+    for attempt in range(1, policy.rounds + 1):
+        bumps = []
+        for i, bk in enumerate(buckets):
+            if not bk.n_rows:
+                continue
+            for p in range(npan):
+                need = int(nnzs[i][p][:bk.n_rows].max(initial=0))
+                if need <= caps[i, p]:
+                    continue
+                new_cap = policy.clamp(
+                    int(caps[i, p]),
+                    _bumped_capacity(int(caps[i, p]), need, policy.growth,
+                                     attempt))
+                if new_cap > caps[i, p]:
+                    bumps.append((i, p, need, new_cap))
+        if not bumps:
             break
         plan.retries = attempt
-        for i, p in over:
-            bk = buckets[i]
-            need = int(nnzs[i][p][:bk.n_rows].max())
-            new_cap = _bumped_capacity(int(caps[i, p]), need,
-                                       plan.retry_safety, attempt)
-            meta = _panel_meta(bk, plan.panel_deg_b[i], new_cap)
-            pop = int(tables[i].shape[0])
-            run = cache.executor(
-                ("bucket-retry-panel", plan.shape_a, plan.shape_b,
-                 plan.cap_a, plan._panel_caps_dev[p], plan.use_kernel, meta,
-                 pop),
-                lambda m=meta: _build_bucket_executor(m, plan.use_kernel,
-                                                      cache))
-            c2, v2, _, _ = run(ad, bps[p], tables[i])
-            cols[i][p] = c2
-            vals[i][p] = v2
+        changed = True
+        for i, p, need, new_cap in bumps:
+            rerun(i, p, new_cap, "bucket-retry")
             plan.retry_events.append(dict(
                 round=attempt, bucket=i, panel=p, old_cap=int(caps[i, p]),
                 new_cap=new_cap, need=need))
             caps[i, p] = new_cap
-    if plan.retries == 0:
+    # exact-symbolic escalation per offending (bucket × panel) unit (§9)
+    over = [(i, p) for i, bk in enumerate(buckets) if bk.n_rows
+            for p in range(npan)
+            if int(nnzs[i][p][:bk.n_rows].max(initial=0)) > caps[i, p]]
+    if over and policy.exact_fallback:
+        changed = True
+        for i, p in over:
+            bk = buckets[i]
+            counts = predictor_mod.exact_row_counts(
+                ad, bps[p], bk.rows, max_deg_a=bk.deg_a,
+                max_deg_b=plan.panel_deg_b[i], route=bk.route, span=bk.span)
+            need = int(counts.max(initial=1))
+            new_cap = _exact_capacity(need, int(caps[i, p]) + 1)
+            rerun(i, p, new_cap, "exact-fallback")
+            plan.degradations.append(dict(
+                kind="exact_symbolic", bucket=i, panel=p,
+                old_cap=int(caps[i, p]), new_cap=int(new_cap),
+                need=int(need)))
+            caps[i, p] = new_cap
+    if not changed:
+        if over and policy.on_exhausted == "raise":
+            raise CapacityExhaustedError(
+                f"retry escalation exhausted with {int(out.overflow)} "
+                f"entries still dropped (bucket×panel units {over})",
+                buckets=[i for i, _ in over], observed=int(out.overflow),
+                plan_key=_plan_key_id(plan))
         return out                     # fast path: nothing overflowed
     plan.panel_caps = caps
     overflow = 0
@@ -1534,6 +1843,15 @@ def _replan_local_panels(plan: SpgemmPlan, ad, bps, out: PanelSpgemmOut,
         for p in range(npan):
             overflow += int(np.maximum(
                 nnzs[i][p][:bk.n_rows] - caps[i, p], 0).sum())
+    if overflow and policy.on_exhausted == "raise":
+        bad = [(i, p) for i, bk in enumerate(buckets) if bk.n_rows
+               for p in range(npan)
+               if int(nnzs[i][p][:bk.n_rows].max(initial=0)) > caps[i, p]]
+        raise CapacityExhaustedError(
+            f"retry escalation exhausted with {overflow} entries still "
+            f"dropped (bucket×panel units {bad})",
+            buckets=[i for i, _ in bad], observed=int(overflow),
+            plan_key=_plan_key_id(plan))
     return PanelSpgemmOut(tuple(tuple(bc) for bc in cols),
                           tuple(tuple(bv) for bv in vals),
                           out.row_nnz, jnp.int32(overflow))
@@ -1547,6 +1865,7 @@ def _replan_dist_panels(plan: SpgemmPlan, ad, g_val_host: np.ndarray,
     panel) re-executes — one cached local per-bucket executor run per row
     shard, against the SAME gathered operands the SPMD pass used (no
     re-gather, no full-bucket SPMD re-run)."""
+    policy = _policy_of(plan)
     pg = plan._panel_gather
     npan = plan.n_panels
     ncols_b = plan.shape_b[1]
@@ -1563,56 +1882,117 @@ def _replan_dist_panels(plan: SpgemmPlan, ad, g_val_host: np.ndarray,
     cols = vals = None                 # materialized on first retry only
     plan.retries = 0
     plan.retry_events = []
-    for attempt in range(1, plan.max_retries + 1):
-        over = []
+    plan.degradations = []
+
+    def shard_operands(s, d):
+        ad_d = CSRDevice(rpt=ad.rpt, col=jnp.asarray(pg.a_col[s]),
+                         val=ad.val, shape=plan.shape_a)
+        bd_d = CSRDevice(rpt=jnp.asarray(pg.g_rpt[d]),
+                         col=jnp.asarray(pg.g_col[d]),
+                         val=jnp.asarray(g_val_host[d]),
+                         shape=(pg.nref, ncols_b))
+        return ad_d, bd_d
+
+    def rerun(i, p, new_cap, unit):
+        nonlocal cols, vals
+        t = tables[i]
+        meta = _panel_meta(buckets[i], plan.panel_deg_b[i], new_cap)
+        run = cache.executor(
+            ("bucket-retry-panel-dist", plan.shape_a, plan.shape_b,
+             plan.cap_a, pg.nref, pg.ecap, plan.use_kernel, meta,
+             t.rows_pb),
+            lambda m=meta: _build_bucket_executor(m, plan.use_kernel,
+                                                  cache))
+        if new_cap > cols[i].shape[2]:
+            grow = new_cap - cols[i].shape[2]
+            cols[i] = np.concatenate(
+                [cols[i], np.full(cols[i].shape[:2] + (grow,),
+                                  COL_SENTINEL, np.int32)], axis=2)
+            vals[i] = np.concatenate(
+                [vals[i], np.zeros(vals[i].shape[:2] + (grow,),
+                                   np.float32)], axis=2)
+        for s in range(plan.row_shards):
+            d = s * npan + p
+            ad_d, bd_d = shard_operands(s, d)
+            c2, v2, _, _ = _invoke_executor(
+                run, dict(unit=unit, bucket=i, panel=p, shard=s),
+                ad_d, bd_d, jnp.asarray(t.table[d]))
+            cols[i][d, :, :new_cap] = np.asarray(c2)
+            vals[i][d, :, :new_cap] = np.asarray(v2)
+
+    for attempt in range(1, policy.rounds + 1):
+        bumps = []
         for i, t in enumerate(tables):
             for p in range(npan):
                 need = int(np.where(t.valid[p::npan], nnzs[i][p::npan],
                                     0).max(initial=0))
-                if need > alloc[i, p]:
-                    over.append((i, p, need))
-        if not over:
+                if need <= alloc[i, p]:
+                    continue
+                new_cap = policy.clamp(
+                    int(alloc[i, p]),
+                    _bumped_capacity(int(caps[i, p]), need, policy.growth,
+                                     attempt))
+                if new_cap > alloc[i, p]:
+                    bumps.append((i, p, need, new_cap))
+        if not bumps:
             break
         if cols is None:
             cols = [np.asarray(c).copy() for c in out.cols]
             vals = [np.asarray(v).copy() for v in out.vals]
         plan.retries = attempt
-        for i, p, need in over:
-            t = tables[i]
-            new_cap = _bumped_capacity(int(caps[i, p]), need,
-                                       plan.retry_safety, attempt)
-            meta = _panel_meta(buckets[i], plan.panel_deg_b[i], new_cap)
-            run = cache.executor(
-                ("bucket-retry-panel-dist", plan.shape_a, plan.shape_b,
-                 plan.cap_a, pg.nref, pg.ecap, plan.use_kernel, meta,
-                 t.rows_pb),
-                lambda m=meta: _build_bucket_executor(m, plan.use_kernel,
-                                                      cache))
-            if new_cap > cols[i].shape[2]:
-                grow = new_cap - cols[i].shape[2]
-                cols[i] = np.concatenate(
-                    [cols[i], np.full(cols[i].shape[:2] + (grow,),
-                                      COL_SENTINEL, np.int32)], axis=2)
-                vals[i] = np.concatenate(
-                    [vals[i], np.zeros(vals[i].shape[:2] + (grow,),
-                                       np.float32)], axis=2)
-            for s in range(plan.row_shards):
-                d = s * npan + p
-                ad_d = CSRDevice(rpt=ad.rpt, col=jnp.asarray(pg.a_col[s]),
-                                 val=ad.val, shape=plan.shape_a)
-                bd_d = CSRDevice(rpt=jnp.asarray(pg.g_rpt[d]),
-                                 col=jnp.asarray(pg.g_col[d]),
-                                 val=jnp.asarray(g_val_host[d]),
-                                 shape=(pg.nref, ncols_b))
-                c2, v2, _, _ = run(ad_d, bd_d, jnp.asarray(t.table[d]))
-                cols[i][d, :, :new_cap] = np.asarray(c2)
-                vals[i][d, :, :new_cap] = np.asarray(v2)
+        for i, p, need, new_cap in bumps:
+            rerun(i, p, new_cap, "bucket-retry")
             plan.retry_events.append(dict(
                 round=attempt, bucket=i, panel=p, old_cap=int(caps[i, p]),
                 new_cap=new_cap, need=need))
             caps[i, p] = new_cap
             alloc[i, p] = new_cap
-    if plan.retries == 0:
+    # exact-symbolic escalation per offending (bucket × panel) unit, one
+    # cached local executor run per row shard against the SAME gathered
+    # operands the SPMD pass used (§9)
+    over = []
+    for i, t in enumerate(tables):
+        for p in range(npan):
+            need = int(np.where(t.valid[p::npan], nnzs[i][p::npan],
+                                0).max(initial=0))
+            if need > alloc[i, p]:
+                over.append((i, p))
+    if over and policy.exact_fallback:
+        if cols is None:
+            cols = [np.asarray(c).copy() for c in out.cols]
+            vals = [np.asarray(v).copy() for v in out.vals]
+        for i, p in over:
+            bk = buckets[i]
+            t = tables[i]
+            need = 1
+            for s in range(plan.row_shards):
+                d = s * npan + p
+                rows = t.table[d][t.valid[d]]
+                if not rows.size:
+                    continue
+                ad_d, bd_d = shard_operands(s, d)
+                counts = predictor_mod.exact_row_counts(
+                    ad_d, bd_d, rows, max_deg_a=bk.deg_a,
+                    max_deg_b=plan.panel_deg_b[i], route=bk.route,
+                    span=bk.span)
+                need = max(need, int(counts.max(initial=1)))
+            new_cap = _exact_capacity(need, int(alloc[i, p]) + 1)
+            rerun(i, p, new_cap, "exact-fallback")
+            plan.degradations.append(dict(
+                kind="exact_symbolic", bucket=i, panel=p,
+                old_cap=int(caps[i, p]), new_cap=int(new_cap),
+                need=int(need)))
+            caps[i, p] = new_cap
+            alloc[i, p] = new_cap
+    if cols is None:
+        if over and policy.on_exhausted == "raise":
+            total = int(np.asarray(out.shard_overflow).sum())
+            raise ShardFailureError(
+                f"retry escalation exhausted with {total} entries still "
+                f"dropped (bucket×panel units {over})",
+                shards=[int(d) // npan for d in
+                        np.flatnonzero(np.asarray(out.shard_overflow))],
+                observed=total, plan_key=_plan_key_id(plan))
         return out                     # fast path: nothing overflowed
     plan.panel_caps = caps
     plan.shard_tables = tuple(
@@ -1626,6 +2006,13 @@ def _replan_dist_panels(plan: SpgemmPlan, ad, g_val_host: np.ndarray,
         cap_d = alloc[i, dev_panel][:, None]
         overflow += np.where(t.valid,
                              np.maximum(nnzs[i] - cap_d, 0), 0).sum(axis=1)
+    if overflow.sum() and policy.on_exhausted == "raise":
+        devs = np.flatnonzero(overflow)
+        raise ShardFailureError(
+            f"retry escalation exhausted with {int(overflow.sum())} entries "
+            "still dropped",
+            shards=[int(d) // npan for d in devs],
+            observed=int(overflow.sum()), plan_key=_plan_key_id(plan))
     return DistSpgemmOut(tuple(cols), tuple(vals), out.row_nnz, overflow)
 
 
@@ -1686,8 +2073,9 @@ def execute(plan: SpgemmPlan, a, b, *, mesh=None, cache: PlanCache | None = None
                 lambda: _build_local_panel_executor(
                     metas, plan.use_kernel, cache, masked=plan.pop_quant))
             bps = _panel_operands_local(plan, b)
-            out = run(ad, bps, *plan.device_args()[1:])
-            if plan.retry_safety > 0:
+            out = _invoke_executor(run, dict(unit="local-panels"),
+                                   ad, bps, *plan.device_args()[1:])
+            if plan.retry_policy is not None or plan.retry_safety > 0:
                 out = _replan_local_panels(plan, ad, bps, out, cache)
             return out
         metas = tuple(_bucket_meta(bk, cap)
@@ -1698,20 +2086,24 @@ def execute(plan: SpgemmPlan, a, b, *, mesh=None, cache: PlanCache | None = None
             lambda: _build_local_executor(metas, plan.alloc.row_capacity,
                                           plan.use_kernel, cache,
                                           masked=plan.pop_quant))
-        out = run(ad, bd, *plan.device_args())
-        if plan.retry_safety > 0:
+        out = _invoke_executor(run, dict(unit="local"),
+                               ad, bd, *plan.device_args())
+        if plan.retry_policy is not None or plan.retry_safety > 0:
             out = _replan_local(plan, ad, bd, out, cache)
         return out
 
     mesh = mesh if mesh is not None else plan.mesh
     if mesh is None:
-        raise ValueError("distributed plan needs a mesh (plan_spgemm(mesh=...)"
-                         " or execute(..., mesh=...))")
+        raise PlanMismatchError(
+            "distributed plan needs a mesh (plan_spgemm(mesh=...)"
+            " or execute(..., mesh=...))", plan_key=_plan_key_id(plan))
     if int(mesh.shape[plan.axis]) != plan.num_shards:
-        raise ValueError(
+        raise PlanMismatchError(
             f"plan was built for {plan.num_shards} shards but mesh axis "
             f"{plan.axis!r} has {int(mesh.shape[plan.axis])} devices — "
-            "re-plan with this mesh")
+            "re-plan with this mesh",
+            observed=int(mesh.shape[plan.axis]), planned=plan.num_shards,
+            plan_key=_plan_key_id(plan))
     if plan.n_panels:
         pg = plan._panel_gather
         metas = tuple(_panel_meta(bk, db, t.capacity)
@@ -1725,15 +2117,16 @@ def execute(plan: SpgemmPlan, a, b, *, mesh=None, cache: PlanCache | None = None
                 plan.axis, plan.use_kernel, cache))
         g_val_host = _gather_panel_values(pg, b)
         a_col_d, g_rpt_d, g_col_d = _panel_dist_args(plan)
-        flat = run(ad.rpt, ad.val, a_col_d, g_rpt_d, g_col_d,
-                   jnp.asarray(g_val_host), *plan.device_args())
+        flat = _invoke_executor(run, dict(unit="dist-panels"),
+                                ad.rpt, ad.val, a_col_d, g_rpt_d, g_col_d,
+                                jnp.asarray(g_val_host), *plan.device_args())
         cols, vals, nnzs = flat[0::3], flat[1::3], flat[2::3]
         overflow = np.zeros(plan.num_shards, dtype=np.int64)
         for t, n in zip(plan.shard_tables, nnzs):
             over = np.maximum(np.asarray(n, dtype=np.int64) - t.capacity, 0)
             overflow += np.where(t.valid, over, 0).sum(axis=1)
         out = DistSpgemmOut(tuple(cols), tuple(vals), tuple(nnzs), overflow)
-        if plan.retry_safety > 0:
+        if plan.retry_policy is not None or plan.retry_safety > 0:
             out = _replan_dist_panels(plan, ad, g_val_host, out, cache)
         return out
     metas = tuple(_bucket_meta(bk, t.capacity)
@@ -1742,14 +2135,15 @@ def execute(plan: SpgemmPlan, a, b, *, mesh=None, cache: PlanCache | None = None
         _executor_key(plan, mesh),
         lambda: _build_dist_executor(metas, mesh, plan.axis,
                                      plan.use_kernel, cache))
-    flat = run(ad, bd, *plan.device_args())
+    flat = _invoke_executor(run, dict(unit="dist"),
+                            ad, bd, *plan.device_args())
     cols, vals, nnzs = flat[0::3], flat[1::3], flat[2::3]
     overflow = np.zeros(plan.num_shards, dtype=np.int64)
     for t, n in zip(plan.shard_tables, nnzs):
         over = np.maximum(np.asarray(n, dtype=np.int64) - t.capacity, 0)
         overflow += np.where(t.valid, over, 0).sum(axis=1)
     out = DistSpgemmOut(tuple(cols), tuple(vals), tuple(nnzs), overflow)
-    if plan.retry_safety > 0:
+    if plan.retry_policy is not None or plan.retry_safety > 0:
         out = _replan_dist(plan, ad, bd, out, cache, mesh)
     return out
 
@@ -1759,13 +2153,15 @@ def execute(plan: SpgemmPlan, a, b, *, mesh=None, cache: PlanCache | None = None
 # --------------------------------------------------------------------------- #
 def _check_overflow(total: int, per_shard, on_overflow: str) -> None:
     if on_overflow not in ("raise", "ignore"):
-        raise ValueError(f"on_overflow must be 'raise' or 'ignore', got "
-                         f"{on_overflow!r}")
+        raise PlanMismatchError(f"on_overflow must be 'raise' or 'ignore', "
+                                f"got {on_overflow!r}")
     if total and on_overflow == "raise":
-        raise ValueError(f"SpGEMM overflow: {total} entries dropped "
-                         f"(per shard: {list(np.asarray(per_shard))}); "
-                         "re-plan with a higher safety factor or pass "
-                         "on_overflow='ignore'")
+        shards = [int(s) for s in np.asarray(per_shard)]
+        raise CapacityExhaustedError(
+            f"SpGEMM overflow: {total} entries dropped "
+            f"(per shard: {shards}); re-plan with a higher safety factor "
+            "or pass on_overflow='ignore'",
+            observed=int(total), shards=shards)
 
 
 def reassemble(plan: SpgemmPlan, out, ncols: int | None = None, *,
@@ -1801,7 +2197,7 @@ def reassemble(plan: SpgemmPlan, out, ncols: int | None = None, *,
         return CSR.from_coo(np.concatenate(rows_out),
                             np.concatenate(cols_out),
                             np.concatenate(vals_out).astype(np.float32),
-                            (nrows, ncols), dedup=False)
+                            (nrows, ncols), dedup=False, validate=False)
     if isinstance(out, DistSpgemmOut):
         _check_overflow(int(out.shard_overflow.sum()), out.shard_overflow,
                         on_overflow)
@@ -1826,4 +2222,4 @@ def reassemble(plan: SpgemmPlan, out, ncols: int | None = None, *,
         vals_out.append(val[m])
     return CSR.from_coo(np.concatenate(rows_out), np.concatenate(cols_out),
                         np.concatenate(vals_out).astype(np.float32),
-                        (nrows, ncols), dedup=False)
+                        (nrows, ncols), dedup=False, validate=False)

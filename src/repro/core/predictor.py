@@ -28,7 +28,8 @@ import numpy as np
 
 from .csr import CSRDevice, COL_SENTINEL, expand_products
 from .flop import flop_per_row
-from .binning import BinningPlan, ROUTE_SPA
+from .binning import BinningPlan, ROUTE_SPA, ceil_pow2
+from . import faults as faults_mod
 
 SAMPLE_FRACTION = 0.003
 SAMPLE_CAP = 300
@@ -188,6 +189,50 @@ def binned_symbolic_counts(a: CSRDevice, b: CSRDevice, rows,
 _binned_counts = binned_symbolic_counts      # backwards-compatible alias
 
 
+@functools.partial(jax.jit, static_argnames=("max_deg_a", "max_deg_b",
+                                             "route", "span"))
+def _exact_rows_chunk(a: CSRDevice, b: CSRDevice, rownnz_b: jax.Array,
+                      rows: jax.Array, max_deg_a: int, max_deg_b: int,
+                      route: str, span: int) -> jax.Array:
+    cols, _ = gather_sampled_products(a, b, rows, max_deg_a, max_deg_b,
+                                      rownnz_b=rownnz_b)
+    if route == ROUTE_SPA:
+        return count_distinct_dense(cols, b.ncols, span)
+    return count_distinct_sorted(cols)
+
+
+def exact_row_counts(a: CSRDevice, b: CSRDevice, rows, *, max_deg_a: int,
+                     max_deg_b: int, route: str = "", span: int = 0,
+                     chunk: int = 256) -> np.ndarray:
+    """EXACT output nnz per listed row — no sampling, no estimate.
+
+    The same symbolic machinery as :func:`binned_symbolic_counts` (gather →
+    distinct-count at the bucket's degree bounds, on the bucket's planned
+    route) run over EVERY listed row instead of the sample, returning the
+    per-row counts instead of the totals.  This is the guaranteed-sufficient
+    capacity source of the retry escalation (DESIGN.md §9): a capacity set
+    to ``max(exact_row_counts(...))`` cannot overflow, whatever the sampled
+    predictor claimed.  Rows are processed in fixed-size chunks so the jit
+    cache stays keyed on the bucket signature, not the bucket population.
+    """
+    rows = np.asarray(rows, dtype=np.int32)
+    if rows.size == 0:
+        return np.zeros(0, dtype=np.int64)
+    rownnz_b = jnp.diff(b.rpt)
+    chunk = int(min(chunk, ceil_pow2(rows.size)))   # pow2: bounded retraces
+    pad = (-rows.size) % chunk
+    padded = (np.concatenate([rows, np.full(pad, rows[-1], np.int32)])
+              if pad else rows)
+    out = []
+    for lo in range(0, padded.size, chunk):
+        cnt = _exact_rows_chunk(a, b, rownnz_b,
+                                jnp.asarray(padded[lo:lo + chunk]),
+                                int(max_deg_a), int(max_deg_b), str(route),
+                                int(span))
+        out.append(np.asarray(cnt, dtype=np.int64))
+    return np.concatenate(out)[:rows.size]
+
+
 def _binned_floprc(a: CSRDevice, b: CSRDevice, plan: BinningPlan) -> jax.Array:
     """floprC assembled bucket-by-bucket through the binned Pallas flop
     kernel — each bucket gathers at its own deg_a bound, not the global one."""
@@ -269,8 +314,10 @@ class AllocationPlan:
         if pow2:
             # capacity half of the plan-cache quantization knob: ≤2× slot
             # inflation buys same-family different-seed executable sharing
-            from .binning import ceil_pow2
             cap = ceil_pow2(cap)
+        # fault-injection hook (core.faults): a no-op unless a test armed
+        # capacity starvation — every planned output capacity funnels here
+        cap = faults_mod.scale_capacity(cap)
         total = int(per_row.sum())
         total = max(align, ((total + align - 1) // align) * align)
         return AllocationPlan(cap, total, safety)

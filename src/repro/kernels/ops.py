@@ -23,6 +23,14 @@ def _interpret() -> bool:
     return jax.default_backend() == "cpu"
 
 
+def _check_route(route: str) -> None:
+    # routes are static plan metadata — an unknown string would otherwise
+    # silently fall through to the ESC path and mask a planner bug
+    if route not in (ROUTE_ESC, ROUTE_SPA):
+        from repro.core.errors import PlanMismatchError
+        raise PlanMismatchError(f"unknown kernel route {route!r}")
+
+
 def flop_per_row(a: CSRDevice, b: CSRDevice, *, block_rows: int = 256,
                  max_deg_a: int = 128) -> jax.Array:
     rownnz_b = jnp.diff(b.rpt)
@@ -82,6 +90,7 @@ def fused_flop_symbolic_routed(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
     """Route-dispatched fused (z*, f*, flop) — the binned predictor's single
     per-bucket Pallas invocation.  The route is static plan metadata
     (``RowBucket.route``), so dispatch costs nothing at runtime."""
+    _check_route(route)
     if route == ROUTE_SPA:
         return _acc_k.fused_flop_symbolic_bitmask_pallas(
             a.rpt, a.col, b.rpt, b.col, rows, max_deg_a=max_deg_a,
@@ -135,6 +144,7 @@ def spgemm_numeric_routed(a: CSRDevice, b: CSRDevice, rows: jax.Array, *,
                           rownnz_b=None):
     """Route-dispatched numeric phase — ``spgemm_binned``'s per-bucket
     kernel entry point."""
+    _check_route(route)
     if route == ROUTE_SPA:
         return spgemm_numeric_spa(
             a, b, rows, max_deg_a=max_deg_a, max_deg_b=max_deg_b,

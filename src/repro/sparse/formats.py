@@ -59,8 +59,15 @@ class CSR:
         shape: tuple[int, int],
         *,
         dedup: bool = True,
+        validate: bool = True,
     ) -> "CSR":
-        """Build CSR from COO triplets; duplicates are summed when ``dedup``."""
+        """Build CSR from COO triplets; duplicates are summed when ``dedup``.
+
+        ``validate`` (opt-out) runs ``repro.core.validate.validate_csr`` on
+        the result so malformed triplets (out-of-range indices, non-finite
+        values) raise a pinpointed ``OperandValidationError`` here instead
+        of corrupting downstream kernels (DESIGN.md §9)."""
+        from repro.core.errors import OperandValidationError
         m, n = shape
         rows = np.asarray(rows, dtype=np.int64)
         cols = np.asarray(cols, dtype=np.int64)
@@ -68,8 +75,18 @@ class CSR:
             vals = np.ones(rows.shape[0], dtype=np.float32)
         vals = np.asarray(vals, dtype=np.float32)
         if rows.size:
-            assert rows.min() >= 0 and rows.max() < m, "row index out of range"
-            assert cols.min() >= 0 and cols.max() < n, "col index out of range"
+            if rows.min() < 0 or rows.max() >= m:
+                bad = int(np.flatnonzero((rows < 0) | (rows >= m))[0])
+                raise OperandValidationError(
+                    f"COO row index {int(rows[bad])} out of range [0, {m})",
+                    field="row", index=bad, observed=int(rows[bad]),
+                    planned=m)
+            if cols.min() < 0 or cols.max() >= n:
+                bad = int(np.flatnonzero((cols < 0) | (cols >= n))[0])
+                raise OperandValidationError(
+                    f"COO col index {int(cols[bad])} out of range [0, {n})",
+                    field="col", index=bad, observed=int(cols[bad]),
+                    planned=n)
         keys = rows * n + cols
         order = np.argsort(keys, kind="stable")
         keys, vals = keys[order], vals[order]
@@ -83,12 +100,17 @@ class CSR:
         rpt = np.zeros(m + 1, dtype=np.int64)
         np.add.at(rpt, out_rows + 1, 1)
         np.cumsum(rpt, out=rpt)
-        return CSR(rpt=rpt, col=out_cols, val=vals, shape=(m, n))
+        out = CSR(rpt=rpt, col=out_cols, val=vals, shape=(m, n))
+        if validate:
+            from repro.core.validate import validate_csr
+            validate_csr(out, name="from_coo", allow_duplicates=not dedup)
+        return out
 
     @staticmethod
-    def from_dense(a: np.ndarray) -> "CSR":
+    def from_dense(a: np.ndarray, *, validate: bool = True) -> "CSR":
         rows, cols = np.nonzero(a)
-        return CSR.from_coo(rows, cols, a[rows, cols].astype(np.float32), a.shape)
+        return CSR.from_coo(rows, cols, a[rows, cols].astype(np.float32),
+                            a.shape, validate=validate)
 
     def to_dense(self) -> np.ndarray:
         out = np.zeros(self.shape, dtype=np.float32)

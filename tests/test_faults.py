@@ -1,0 +1,295 @@
+"""Fault-injection containment suite (DESIGN.md §9).
+
+The contract under test: for EVERY injected fault class on EVERY suite
+family, ``plan_spgemm``/``execute``/``reassemble`` either produce a result
+bitwise-equal to an ample-capacity reference (exact ``rpt``/``col``, values
+to float tolerance) or raise the matching typed
+:mod:`repro.core.errors` subclass — never a silently corrupted matrix.
+
+Fault classes (see :mod:`repro.core.faults`):
+
+* capacity starvation  — predictor under-shoots every bucket capacity
+* sketch corruption    — the sampled structural sketch itself is wrong
+* gather starvation    — panel-gather entry capacity below the payload
+* executor failure     — an executor dies mid-dispatch
+* malformed operand    — NaN smuggled into an operand's values
+
+Plus the escalation-budget pins: the retry ladder terminates in at most
+``rounds + 1`` executes per (bucket) unit, and an ARMED no-fault plan pays
+zero extra retraces.  The 4-device shard_map variant runs in a subprocess
+(device-count env must precede jax init), like ``tests/test_replan.py``.
+"""
+import json
+import os
+import subprocess
+import sys
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.sparse import random as sprand
+from repro.sparse.formats import CSR, spgemm_dense_oracle
+from repro.core import faults, plan as plan_mod, spgemm
+from repro.core.errors import (CapacityExhaustedError, OperandValidationError,
+                               ShardFailureError, SpgemmError)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _families():
+    return [
+        ("er", sprand.erdos_renyi(250, 250, 4, seed=25),
+         sprand.erdos_renyi(250, 250, 3, seed=26)),
+        ("pl", sprand.power_law(300, 300, 5, 1.5, seed=21),
+         sprand.power_law(300, 300, 4, 1.6, seed=22)),
+        ("rmat", sprand.rmat(250, 250, 1250, seed=31),
+         sprand.rmat(250, 250, 1000, seed=32)),
+        ("band", sprand.banded(250, 250, 10, 14, seed=23),
+         sprand.banded(250, 250, 8, 12, seed=24)),
+        ("fem", sprand.banded(160, 160, 40, 30, seed=51),
+         sprand.banded(160, 160, 32, 28, seed=52)),
+    ]
+
+
+def _reference(p, a, b):
+    """Ample-capacity binned run on the same sample — the bitwise ground
+    truth a fault-recovered result must match."""
+    pa = plan_mod.plan_spgemm(a, b, safety=64.0, sample_rows=p.sample_rows)
+    oa = spgemm.spgemm_binned(pa.to_device(a, "a"), pa.to_device(b, "b"),
+                              pa.binning, alloc=pa.alloc)
+    assert int(oa.overflow) == 0, "reference must not overflow"
+    return plan_mod.reassemble(pa, oa)
+
+
+def _assert_bitwise(c, ca, a, b):
+    np.testing.assert_array_equal(c.rpt, ca.rpt)
+    np.testing.assert_array_equal(c.col, ca.col)
+    np.testing.assert_allclose(c.val, ca.val, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(c.to_dense(), spgemm_dense_oracle(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# containment matrix: 5 fault classes x 5 suite families
+# --------------------------------------------------------------------------- #
+# (name, inject kwargs, plan kwargs, outcome, expected error classes)
+FAULTS = [
+    ("capacity", dict(capacity_scale=0.2), {}, "recover", ()),
+    ("sketch", dict(sketch_scale=0.05), {}, "recover", ()),
+    ("gather", dict(gather_scale=0.25), dict(n_panels=2), "raise",
+     (CapacityExhaustedError, ShardFailureError)),
+    ("executor", dict(fail_executor={"unit": "local"}), {}, "raise",
+     (ShardFailureError,)),
+    ("operand", None, {}, "raise", (OperandValidationError,)),
+]
+
+
+@pytest.mark.parametrize("fault,inj,pkw,outcome,errs", FAULTS,
+                         ids=[f[0] for f in FAULTS])
+@pytest.mark.parametrize("name,a,b", _families(),
+                         ids=[f[0] for f in _families()])
+def test_containment_matrix(name, a, b, fault, inj, pkw, outcome, errs):
+    if fault == "operand":
+        bad = a.val.copy()
+        bad[bad.size // 2] = np.nan
+        a = CSR(a.rpt, a.col, bad, a.shape)
+    policy = plan_mod.RetryPolicy(rounds=2)
+    try:
+        with faults.inject(**(inj or {})):
+            p = plan_mod.plan_spgemm(a, b, safety=1.3, retry_policy=policy,
+                                     **pkw)
+            out = plan_mod.execute(p, a, b, cache=plan_mod.PlanCache())
+            c = plan_mod.reassemble(p, out)
+    except SpgemmError as e:
+        assert outcome == "raise", f"{name}/{fault}: unexpected {e!r}"
+        assert isinstance(e, errs), f"{name}/{fault}: wrong class {type(e)}"
+        assert isinstance(e, ValueError)       # back-compat contract
+        return
+    assert outcome == "recover", f"{name}/{fault}: fault was not detected"
+    assert not int(np.asarray(getattr(out, "overflow", 0)))
+    _assert_bitwise(c, _reference(p, a, b), a, b)
+
+
+# --------------------------------------------------------------------------- #
+# escalation budget + typed-exhaustion pins
+# --------------------------------------------------------------------------- #
+def test_escalation_terminates_within_budget():
+    """Under uniform starvation the escalation runs at most ``rounds``
+    ladder executes plus one exact-fallback execute per bucket — and the
+    result is still bitwise-correct."""
+    _, a, b = _families()[1]       # power-law: widest bucket spread
+    policy = plan_mod.RetryPolicy(rounds=2, growth=1.5)
+    with faults.inject(capacity_scale=0.15):
+        p = plan_mod.plan_spgemm(a, b, safety=1.3, retry_policy=policy)
+        out = plan_mod.execute(p, a, b, cache=plan_mod.PlanCache())
+    assert int(out.overflow) == 0
+    assert p.retries <= policy.rounds
+    ladder = Counter(e["bucket"] for e in p.retry_events)
+    exact = Counter(d["bucket"] for d in p.degradations)
+    for i in set(ladder) | set(exact):
+        assert ladder[i] + exact[i] <= policy.rounds + 1, (i, ladder, exact)
+        assert exact[i] <= 1, "exact fallback must execute at most once"
+    # the degradation ledger is the observable record of the escalation
+    st = p.stats()
+    assert st["degradations"] == p.degradations
+    json.dumps(st)                 # and it stays JSON-serializable
+    _assert_bitwise(plan_mod.reassemble(p, out), _reference(p, a, b), a, b)
+
+
+def test_exact_fallback_alone_closes_overflow():
+    """rounds=0 + exact_fallback: no ladder rounds at all — the symbolic
+    escape hatch must close every overflow in ONE extra execute per bucket."""
+    _, a, b = _families()[3]
+    policy = plan_mod.RetryPolicy(rounds=0, exact_fallback=True)
+    with faults.inject(capacity_scale=0.2):
+        p = plan_mod.plan_spgemm(a, b, safety=1.3, retry_policy=policy)
+        out = plan_mod.execute(p, a, b, cache=plan_mod.PlanCache())
+    assert p.retries == 0 and not p.retry_events
+    assert p.degradations, "starved caps must show up as degradations"
+    assert all(d["kind"] == "exact_symbolic" and d["new_cap"] >= d["need"]
+               for d in p.degradations)
+    assert int(out.overflow) == 0
+    _assert_bitwise(plan_mod.reassemble(p, out), _reference(p, a, b), a, b)
+
+
+def test_exhaustion_raises_typed_error():
+    """No budget, no fallback, raise-on-exhausted: the failure is a
+    CapacityExhaustedError naming the starved buckets — never silent."""
+    _, a, b = _families()[0]
+    policy = plan_mod.RetryPolicy(rounds=0, exact_fallback=False,
+                                  on_exhausted="raise")
+    with faults.inject(capacity_scale=0.1):
+        p = plan_mod.plan_spgemm(a, b, safety=1.3, retry_policy=policy)
+        with pytest.raises(CapacityExhaustedError) as exc:
+            plan_mod.execute(p, a, b, cache=plan_mod.PlanCache())
+    assert exc.value.context["buckets"], "error must name the starved buckets"
+    assert exc.value.context["observed"] > 0
+
+
+def test_executor_fault_wraps_cause():
+    _, a, b = _families()[0]
+    with faults.inject(fail_executor={"unit": "local"}):
+        p = plan_mod.plan_spgemm(a, b, safety=1.3,
+                                 retry_policy=plan_mod.RetryPolicy())
+        with pytest.raises(ShardFailureError) as exc:
+            plan_mod.execute(p, a, b, cache=plan_mod.PlanCache())
+    assert exc.value.context["unit"] == "local"
+    assert isinstance(exc.value.__cause__, faults.InjectedFault)
+
+
+def test_gather_starvation_names_panel():
+    _, a, b = _families()[3]
+    with faults.inject(gather_scale=0.25):
+        p = plan_mod.plan_spgemm(a, b, safety=1.3, n_panels=2)
+        with pytest.raises(CapacityExhaustedError) as exc:
+            plan_mod.execute(p, a, b, cache=plan_mod.PlanCache())
+    ctx = exc.value.context
+    assert "panel" in ctx and ctx["observed"] > ctx["planned"]
+
+
+def test_no_fault_armed_path_zero_retraces():
+    """Arming RetryPolicy costs nothing on the happy path: no retries, no
+    degradations, and a second execute through the same cache retraces
+    NOTHING (compile-count pinned)."""
+    a = sprand.banded(300, 300, 8, 10, seed=3)
+    cache = plan_mod.PlanCache()
+    p = plan_mod.plan_spgemm(a, a, safety=2.0,
+                             retry_policy=plan_mod.RetryPolicy())
+    out = plan_mod.execute(p, a, a, cache=cache)
+    assert p.retries == 0 and not p.retry_events and not p.degradations
+    assert int(out.overflow) == 0
+    t = cache.stats()["traces"]
+    plan_mod.execute(p, a, a, cache=cache)
+    assert cache.stats()["traces"] == t, "no-fault armed path retraced"
+    st = p.stats()
+    assert st["retries"] == 0 and st["degradations"] == []
+    assert st["validation"]["operands_validated"] == 2
+
+
+# --------------------------------------------------------------------------- #
+# 4-device shard_map: distributed containment (subprocess, like
+# tests/test_replan.py)
+# --------------------------------------------------------------------------- #
+FAULTS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+
+from repro.sparse import random as sprand
+from repro.sparse.formats import spgemm_dense_oracle
+from repro.core import faults, plan as plan_mod, spgemm
+from repro.core.errors import ShardFailureError
+
+mesh = jax.make_mesh((4,), ("data",))
+a = sprand.banded(400, 400, 10, 14, seed=23)
+b = sprand.banded(400, 400, 8, 12, seed=24)
+out = {}
+
+# executor death on a shard dispatch -> ShardFailureError naming the unit
+try:
+    with faults.inject(fail_executor={"unit": "dist"}):
+        p = plan_mod.plan_spgemm(a, b, mesh=mesh, safety=1.3,
+                                 retry_policy=plan_mod.RetryPolicy())
+        plan_mod.execute(p, a, b, cache=plan_mod.PlanCache())
+    out["exec"] = dict(raised=False)
+except ShardFailureError as e:
+    out["exec"] = dict(raised=True, unit=e.context.get("unit"),
+                       cause=type(e.__cause__).__name__)
+
+# panel-gather starvation -> ShardFailureError at plan time, naming
+# shard AND panel
+try:
+    with faults.inject(gather_scale=0.25):
+        plan_mod.plan_spgemm(a, b, mesh=mesh, n_panels=2, safety=1.3)
+    out["gather"] = dict(raised=False)
+except ShardFailureError as e:
+    out["gather"] = dict(raised=True,
+                         has_shard="shard" in e.context,
+                         has_panel="panel" in e.context,
+                         starved=e.context.get("observed", 0)
+                                 > e.context.get("planned", 0))
+
+# capacity starvation -> distributed escalation recovers bitwise
+with faults.inject(capacity_scale=0.2):
+    p = plan_mod.plan_spgemm(a, b, mesh=mesh, safety=1.3,
+                             retry_policy=plan_mod.RetryPolicy(rounds=2))
+    res = plan_mod.execute(p, a, b, cache=plan_mod.PlanCache())
+c = plan_mod.reassemble(p, res)
+pa = plan_mod.plan_spgemm(a, b, safety=64.0, sample_rows=p.sample_rows)
+oa = spgemm.spgemm_binned(pa.to_device(a, "a"), pa.to_device(b, "b"),
+                          pa.binning, alloc=pa.alloc)
+ca = plan_mod.reassemble(pa, oa)
+out["capacity"] = dict(
+    overflow=int(res.shard_overflow.sum()),
+    rpt_eq=bool((c.rpt == ca.rpt).all()),
+    col_eq=bool((c.col == ca.col).all()),
+    vdiff=float(np.abs(c.val - ca.val).max()),
+    ref_err=float(np.abs(c.to_dense() - spgemm_dense_oracle(a, b)).max()),
+)
+print(json.dumps(out))
+"""
+
+
+def _run(script: str, timeout: int = 900) -> dict:
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_faults_4dev_shard_containment():
+    rec = _run(FAULTS_SCRIPT)
+    assert rec["exec"]["raised"] and rec["exec"]["unit"] == "dist"
+    assert rec["exec"]["cause"] == "InjectedFault"
+    assert rec["gather"]["raised"], "gather starvation must not pass silently"
+    assert rec["gather"]["has_shard"] and rec["gather"]["has_panel"]
+    assert rec["gather"]["starved"]
+    assert rec["capacity"]["overflow"] == 0
+    assert rec["capacity"]["rpt_eq"] and rec["capacity"]["col_eq"]
+    assert rec["capacity"]["vdiff"] < 1e-4
+    assert rec["capacity"]["ref_err"] < 1e-3

@@ -230,7 +230,7 @@ def test_panel_serving_pair_shares_executor_zero_retraces():
 def test_panel_operand_validation():
     a = sprand.banded(200, 200, 6, 8, seed=3)
     p = plan_mod.plan_spgemm(a, a, safety=2.0, n_panels=2)
-    with pytest.raises(TypeError, match="host CSR"):
+    with pytest.raises(plan_mod.PlanMismatchError, match="host CSR"):
         plan_mod.execute(p, a, p.to_device(a, "b"))
     other = sprand.banded(200, 200, 7, 9, seed=4)
     with pytest.raises(ValueError, match="re-plan"):

@@ -178,6 +178,85 @@ def test_max_retries_zero_leaves_overflow_surfaced():
 
 
 # --------------------------------------------------------------------------- #
+# RetryPolicy escalation (DESIGN.md §9): rounds sweep + exact-symbolic
+# fallback on every family
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("rounds", [0, 1, 2])
+@pytest.mark.parametrize("name,a,b", _families(),
+                         ids=[f[0] for f in _families()])
+def test_retry_policy_rounds_sweep(name, a, b, rounds):
+    """safety=0 under-allocation under the typed policy: whatever the
+    ladder cannot close within its budget is closed by the exact-symbolic
+    fallback — ``execute`` always converges, bitwise vs the ample run."""
+    p = plan_mod.plan_spgemm(a, b, safety=0.0,
+                             retry_policy=plan_mod.RetryPolicy(rounds=rounds))
+    caps_before = list(p.alloc.bucket_capacities)
+    out = plan_mod.execute(p, a, b, cache=plan_mod.PlanCache())
+
+    pa, oa = _ample_reference(p, a, b)
+    ref_nnz = np.asarray(oa.row_nnz)
+    overflowed = {i for i, bk in enumerate(p.binning.buckets)
+                  if bk.n_rows and int(ref_nnz[bk.rows].max()) > caps_before[i]}
+    assert overflowed, f"{name}: safety=0 failed to force under-allocation"
+    assert int(out.overflow) == 0
+
+    if rounds == 0:
+        # no ladder budget at all: EVERY starved bucket must appear in the
+        # degradation ledger, each closed by one exact-symbolic execute
+        assert p.retries == 0 and not p.retry_events
+        assert {d["bucket"] for d in p.degradations} == overflowed
+    else:
+        # row_nnz is exact, so the ladder (floored at the observed need)
+        # converges in one round — the fallback never fires
+        assert p.retries == 1
+        assert {e["bucket"] for e in p.retry_events} == overflowed
+        assert not p.degradations
+    for d in p.degradations:
+        assert d["kind"] == "exact_symbolic"
+        assert d["new_cap"] >= d["need"] > d["old_cap"]
+
+    c = plan_mod.reassemble(p, out)
+    ca = plan_mod.reassemble(pa, oa)
+    np.testing.assert_array_equal(c.rpt, ca.rpt)
+    np.testing.assert_array_equal(c.col, ca.col)
+    np.testing.assert_allclose(c.val, ca.val, rtol=1e-5, atol=1e-5)
+
+
+def test_retry_policy_ceiling_forces_fallback():
+    """A max_capacity ceiling clamps the ladder; starved buckets above it
+    must reach the exact fallback (which ignores the ceiling) instead of
+    looping forever or surfacing overflow."""
+    _, a, b = _families()[1]      # power-law: hub rows far above the floor
+    p = plan_mod.plan_spgemm(
+        a, b, safety=0.0,
+        retry_policy=plan_mod.RetryPolicy(rounds=2, max_capacity=16))
+    out = plan_mod.execute(p, a, b, cache=plan_mod.PlanCache())
+    assert int(out.overflow) == 0
+    assert p.degradations, "ceiling-clamped buckets must hit the fallback"
+    assert all(e["new_cap"] <= 16 for e in p.retry_events), \
+        "ladder bumped past the max_capacity ceiling"
+    assert any(d["new_cap"] > 16 for d in p.degradations)
+    c = plan_mod.reassemble(p, out)
+    np.testing.assert_allclose(c.to_dense(), spgemm_dense_oracle(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_retry_policy_exhausted_raises_typed():
+    """No rounds, no fallback, on_exhausted='raise': a typed
+    CapacityExhaustedError naming the starved buckets, not silent overflow."""
+    a = sprand.banded(200, 200, 10, 12, seed=9)
+    p = plan_mod.plan_spgemm(
+        a, a, safety=0.0,
+        retry_policy=plan_mod.RetryPolicy(rounds=0, exact_fallback=False,
+                                          on_exhausted="raise"))
+    with pytest.raises(plan_mod.CapacityExhaustedError, match="exhausted") \
+            as exc:
+        plan_mod.execute(p, a, a, cache=plan_mod.PlanCache())
+    assert exc.value.context["buckets"]
+    assert exc.value.context["observed"] > 0
+
+
+# --------------------------------------------------------------------------- #
 # 4-device shard_map: the distributed retry loop (subprocess, like
 # tests/test_distributed.py)
 # --------------------------------------------------------------------------- #

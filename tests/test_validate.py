@@ -1,0 +1,158 @@
+"""Property tests for operand validation (DESIGN.md §9).
+
+``validate_csr`` must accept every matrix the sparse suite generates, and
+reject every single-field mutation — swapped columns, truncated rpt,
+injected NaN, out-of-range column index, duplicated column — with an
+:class:`~repro.core.errors.OperandValidationError` whose context pinpoints
+the offending field.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal CI image — deterministic tests must still run
+    from hypothesis_shim import given, settings, st
+
+from repro.sparse import random as sprand
+from repro.sparse.formats import CSR
+from repro.core.errors import (OperandValidationError, PlanMismatchError,
+                               SpgemmError)
+from repro.core.validate import validate_csr, validate_pair
+
+
+def _family(fam: str, m: int, seed: int) -> CSR:
+    if fam == "er":
+        return sprand.erdos_renyi(m, m, 4, seed=seed)
+    if fam == "pl":
+        return sprand.power_law(m, m, 5, 1.5, seed=seed)
+    if fam == "rmat":
+        return sprand.rmat(m, m, 5 * m, seed=seed)
+    if fam == "band":
+        return sprand.banded(m, m, 12, 16, seed=seed)
+    return sprand.banded(m // 2, m // 2, 48, 32, seed=seed)   # fem
+
+
+# --------------------------------------------------------------------------- #
+# acceptance: everything the suite generates is valid
+# --------------------------------------------------------------------------- #
+@given(st.integers(0, 1000), st.integers(40, 300))
+@settings(max_examples=15, deadline=None)
+def test_accepts_every_suite_matrix(seed, m):
+    for fam in ("er", "pl", "rmat", "band", "fem"):
+        validate_csr(_family(fam, m, seed), name=fam)
+
+
+def test_accepts_empty_and_degenerate():
+    validate_csr(CSR.from_coo(np.zeros(0), np.zeros(0), None, (5, 7)))
+    validate_csr(CSR.from_coo(np.zeros(0), np.zeros(0), None, (0, 0)))
+    # empty leading/trailing rows exercise the row-boundary mask edges
+    validate_csr(CSR.from_coo(np.array([2, 2]), np.array([1, 3]),
+                              None, (6, 4)))
+
+
+def test_accepts_duplicates_when_allowed():
+    m = CSR.from_coo(np.array([0, 0]), np.array([2, 2]),
+                     np.ones(2, np.float32), (2, 4), dedup=False,
+                     validate=False)
+    validate_csr(m, allow_duplicates=True)
+    with pytest.raises(OperandValidationError, match="duplicate"):
+        validate_csr(m)
+
+
+# --------------------------------------------------------------------------- #
+# rejection: every single-field mutation raises with the right context
+# --------------------------------------------------------------------------- #
+def _mutations(m: CSR):
+    """(name, mutated CSR, expected-context field, message regex)."""
+    assert m.nnz >= 4
+    r = int(np.flatnonzero(np.diff(m.rpt) >= 2)[0])   # a row with >= 2 entries
+    lo = int(m.rpt[r])
+    out = []
+
+    swapped = m.col.copy()
+    swapped[lo], swapped[lo + 1] = swapped[lo + 1], swapped[lo]
+    out.append(("swapped_cols",
+                CSR(m.rpt, swapped, m.val, m.shape), "col", "unsorted"))
+
+    out.append(("truncated_rpt",
+                CSR(m.rpt[:-1], m.col, m.val, m.shape), "rpt", "length"))
+
+    nanval = m.val.copy()
+    nanval[lo] = np.nan
+    out.append(("nan_val",
+                CSR(m.rpt, m.col, nanval, m.shape), "val", "non-finite"))
+
+    oob = m.col.copy()
+    oob[lo] = m.ncols + 3
+    out.append(("oob_col",
+                CSR(m.rpt, oob, m.val, m.shape), "col", "out of range"))
+
+    dup = m.col.copy()
+    dup[lo + 1] = dup[lo]
+    out.append(("dup_col",
+                CSR(m.rpt, dup, m.val, m.shape), "col", "duplicate"))
+
+    broken = m.rpt.copy()
+    broken[1] = broken[2] + 1          # non-monotone interior pointer
+    out.append(("nonmonotone_rpt",
+                CSR(broken, m.col, m.val, m.shape), "rpt", "monotone"))
+    return out
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=10, deadline=None)
+def test_rejects_every_mutation(seed):
+    m = _family("er", 80, seed)
+    for name, bad, field, pattern in _mutations(m):
+        with pytest.raises(OperandValidationError, match=pattern) as exc:
+            validate_csr(bad, name=name)
+        assert exc.value.context["field"] == field, name
+        assert exc.value.context["operand"] == name
+        assert isinstance(exc.value, ValueError)     # back-compat contract
+
+
+def test_mutation_pinpoints_row_and_index():
+    m = _family("band", 60, seed=7)
+    r = int(np.flatnonzero(np.diff(m.rpt) >= 1)[2])
+    e = int(m.rpt[r])
+    oob = m.col.copy()
+    oob[e] = m.ncols
+    with pytest.raises(OperandValidationError) as exc:
+        validate_csr(CSR(m.rpt, oob, m.val, m.shape))
+    assert exc.value.context["index"] == e
+    assert exc.value.context["row"] == r
+    assert exc.value.context["observed"] == m.ncols
+    assert exc.value.context["planned"] == m.ncols
+
+
+def test_validate_pair_shape_mismatch():
+    a = _family("er", 40, seed=1)
+    b = _family("er", 50, seed=2)
+    with pytest.raises(OperandValidationError, match="incompatible"):
+        validate_pair(a, b)
+
+
+def test_from_coo_rejects_bad_triplets():
+    with pytest.raises(OperandValidationError, match="out of range"):
+        CSR.from_coo(np.array([0, 9]), np.array([0, 1]), None, (3, 3))
+    with pytest.raises(OperandValidationError, match="out of range"):
+        CSR.from_coo(np.array([0, 1]), np.array([0, -2]), None, (3, 3))
+    with pytest.raises(OperandValidationError, match="non-finite"):
+        CSR.from_coo(np.array([0, 1]), np.array([0, 1]),
+                     np.array([1.0, np.inf], np.float32), (3, 3))
+    # opt-out keeps the paper's "values are arbitrary" escape hatch
+    CSR.from_coo(np.array([0, 1]), np.array([0, 1]),
+                 np.array([1.0, np.inf], np.float32), (3, 3),
+                 validate=False)
+
+
+def test_error_taxonomy_hierarchy():
+    # every typed error is a SpgemmError and a ValueError (existing
+    # pytest.raises(ValueError) pins keep passing across the conversion)
+    for cls in (OperandValidationError, PlanMismatchError):
+        assert issubclass(cls, SpgemmError)
+        assert issubclass(cls, ValueError)
+    e = OperandValidationError("msg", field="col", index=3, observed=9)
+    assert "field='col'" in str(e) and "index=3" in str(e) and "msg" in str(e)
+    assert e.context == dict(field="col", index=3, observed=9)
