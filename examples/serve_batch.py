@@ -1,33 +1,59 @@
-"""Batched serving example: prefill a batch of prompts into KV caches, then
-decode tokens for all sequences in lock-step (deliverable (b)).
+"""SpGEMM-as-a-service demo (DESIGN.md §10): a batch of mixed-family
+multiply requests moves through the fault-contained scheduler — admission
+pricing from the paper's sampled predictor, template batching with
+zero-retrace steady state, load shedding, deadline expiry, and typed
+errors for everything that cannot complete.
 
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
-import jax
-import jax.numpy as jnp
+import json
+
 import numpy as np
 
-from repro.configs.base import get_smoke_config
-from repro.models import transformer as T
-from repro.models.schema import init_params
-from repro.serve import engine
+from repro.serve import ServiceConfig, SpgemmService
+from repro.sparse import random as sprand
+from repro.sparse.formats import spgemm_dense_oracle
 
-cfg = get_smoke_config("qwen2.5-32b")
-params = init_params(T.build_schema(cfg, 1), jax.random.PRNGKey(0),
-                     jnp.float32)
+svc = SpgemmService(ServiceConfig(queue_capacity=16, max_batch=4,
+                                  default_deadline=60.0))
 
-rng = np.random.default_rng(0)
-B, P, N = 4, 8, 16
-prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
+pairs = [
+    ("er", sprand.erdos_renyi(400, 400, 4, seed=1),
+     sprand.erdos_renyi(400, 400, 3, seed=2)),
+    ("pl", sprand.power_law(400, 400, 5, 1.5, seed=3),
+     sprand.power_law(400, 400, 4, 1.6, seed=4)),
+    ("band", sprand.banded(400, 400, 10, 14, seed=5),
+     sprand.banded(400, 400, 8, 12, seed=6)),
+]
 
-sess = engine.start_session(cfg, params, batch=B, max_len=P + N + 1)
-toks = engine.generate(sess, prompts, num_tokens=N, temperature=0.0)
-print("prompts:\n", np.asarray(prompts))
-print("generated:\n", np.asarray(toks))
-assert toks.shape == (B, N)
+# two rounds of each family: round 2 rides round 1's cached executors
+reqs = [(fam, a, b, svc.submit(a, b))
+        for _ in range(2) for fam, a, b in pairs]
+svc.drain()
 
-# sampled decoding from the same prompts
-sess2 = engine.start_session(cfg, params, batch=B, max_len=P + N + 1)
-toks2 = engine.generate(sess2, prompts, num_tokens=N, temperature=0.8, seed=1)
-print("sampled:\n", np.asarray(toks2))
-print(f"OK — decoded {B}×{N} tokens with a {P}-token prefill cache.")
+for fam, a, b, r in reqs:
+    c = r.result_or_raise()
+    np.testing.assert_allclose(c.to_dense(), spgemm_dense_oracle(a, b),
+                               rtol=1e-4, atol=1e-4)
+    est = r.stats["estimate"]
+    print(f"req {r.id} [{fam:4s}] {r.state:8s} nnz={c.nnz:6d} "
+          f"priced {est['total_bytes'] / 1e6:6.2f} MB "
+          f"latency {r.latency * 1e3:7.1f} ms")
+
+# overload: an 8-request burst against the 4 remaining queue slots +
+# an impossible deadline — typed rejections, never hangs
+late = svc.submit(pairs[1][1], pairs[1][2], deadline=-1.0)
+burst = [svc.submit(pairs[0][1], pairs[0][2]) for _ in range(18)]
+svc.drain()
+shed = sum(r.state == "SHED" for r in burst)
+done = sum(r.state == "DONE" for r in burst)
+print(f"\nburst of {len(burst)}: {done} served, {shed} shed "
+      f"(typed AdmissionRejectedError); late request -> {late.state}")
+
+st = svc.stats()
+print(f"\nservice: {st['submitted']} submitted, waves={st['waves']}, "
+      f"retraces={st['plan_cache']['traces']} "
+      f"(templates={st['templates']['size']})")
+print(json.dumps(st["terminal"], indent=1))
+assert st["in_flight"] == 0 and st["queue"]["depth"] == 0
+print("OK — every request terminal, queue drained.")

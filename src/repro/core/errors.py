@@ -16,7 +16,9 @@ Taxonomy::
     ├── OperandValidationError   malformed operand (CSR invariant broken)
     ├── PlanMismatchError        operand/mesh/template doesn't fit the plan
     ├── CapacityExhaustedError   output slots exhausted beyond recovery
-    └── ShardFailureError        an execution unit (shard/panel/bucket) died
+    ├── ShardFailureError        an execution unit (shard/panel/bucket) died
+    ├── AdmissionRejectedError   serving front end refused/shed the request
+    └── DeadlineExceededError    request deadline passed before completion
 """
 from __future__ import annotations
 
@@ -70,3 +72,20 @@ class ShardFailureError(SpgemmError):
     gather buffer was starved below its payload, or a bucket executor
     raised mid-flight.  ``context`` names the unit (``shard``/``panel``/
     ``bucket``) and chains the original failure as ``__cause__``."""
+
+
+class AdmissionRejectedError(SpgemmError):
+    """The serving front end (:mod:`repro.serve.spgemm_service`) refused a
+    request instead of letting it hang or starve the fleet: the bounded
+    queue was full (load shedding), the request's cost estimate exceeds the
+    whole device budget (it can never be scheduled), or a circuit breaker
+    is open for its template.  ``context`` carries ``request``, the
+    admission decision (``reason``) and the observed vs planned quantity
+    (queue depth vs capacity, estimated vs budget bytes)."""
+
+
+class DeadlineExceededError(SpgemmError):
+    """A request's deadline passed before it reached execution (expired
+    while queued) or before its result was produced.  ``context`` carries
+    ``request``, ``deadline`` and ``waited`` (seconds on the service
+    clock)."""

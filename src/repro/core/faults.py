@@ -44,8 +44,8 @@ class InjectedFault(RuntimeError):
     :class:`repro.core.errors.ShardFailureError` naming the unit."""
 
 
-@dataclasses.dataclass
-class FaultState:
+@dataclasses.dataclass(eq=False)   # identity compare: the inject() unwind
+class FaultState:                  # must never pop a LOOK-ALIKE sibling
     capacity_scale: float | None = None
     sketch_scale: float | None = None
     gather_scale: float | None = None
@@ -80,7 +80,20 @@ def inject(*, capacity_scale: float | None = None,
     try:
         yield st
     finally:
-        _STACK.remove(st)
+        # Re-entrancy guard: unwind by IDENTITY, tolerating double exit and
+        # a stack perturbed by the guarded block raising — the hooks are
+        # restored no matter how the block leaves, so a service worker loop
+        # can never leak an armed fault from one request into the next.
+        for i in range(len(_STACK) - 1, -1, -1):
+            if _STACK[i] is st:
+                del _STACK[i]
+                break
+
+
+def armed() -> bool:
+    """True while any ``inject`` context is active (observability hook —
+    the serving layer stamps it into per-request stats)."""
+    return bool(_STACK)
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,18 @@
+# Serving layer: the SpGEMM request scheduler (DESIGN.md §10) plus the
+# transformer inference engine demo.  Lazy imports keep `from repro.serve
+# import admission` from dragging jax tracing machinery in.
+
+
+def __getattr__(name):
+    if name in ("SpgemmService", "ServiceConfig", "Request", "RequestState",
+                "CircuitBreaker"):
+        from . import spgemm_service as _svc
+        return getattr(_svc, name)
+    if name in ("CostEstimate", "MemoryBudget", "estimate", "estimate_cost",
+                "planned_bytes", "capacity_bound_rows"):
+        from . import admission as _adm
+        return getattr(_adm, name)
+    if name == "BoundedQueue":
+        from . import queueing as _q
+        return _q.BoundedQueue
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,194 @@
+"""Property suite for the serving admission cost model (DESIGN.md §10).
+
+Two contracts make :mod:`repro.serve.admission` safe to admit against:
+
+* **monotone** — scaling predicted per-row structure or the per-row FLOP
+  bound UP never decreases the estimate (an admission controller that
+  prices bigger work cheaper admits its way into OOM);
+* **upper bound** — ``capacity_bytes`` dominates the bytes the planner
+  actually allocates for output buffers, on every suite family, with and
+  without ``pop_quant`` / templates / panels.
+
+Plus the budget-ledger pins (reserve/release/fits) and the service-side
+``estimate_cost`` round trip.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from hypothesis_shim import given, settings, st
+
+from repro.core import plan as plan_mod
+from repro.core.errors import AdmissionRejectedError
+from repro.serve import admission
+from repro.sparse import random as sprand
+
+
+import jax
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_executables():
+    """Planning traces predictor/symbolic executors per family×variant;
+    drop them from jax's global caches after the module so a long
+    single-process suite run doesn't accumulate native compiler state."""
+    yield
+    jax.clear_caches()
+
+
+def _families():
+    return [
+        ("er", sprand.erdos_renyi(250, 250, 4, seed=25),
+         sprand.erdos_renyi(250, 250, 3, seed=26)),
+        ("pl", sprand.power_law(300, 300, 5, 1.5, seed=21),
+         sprand.power_law(300, 300, 4, 1.6, seed=22)),
+        ("rmat", sprand.rmat(250, 250, 1250, seed=31),
+         sprand.rmat(250, 250, 1000, seed=32)),
+        ("band", sprand.banded(250, 250, 10, 14, seed=23),
+         sprand.banded(250, 250, 8, 12, seed=24)),
+        ("fem", sprand.banded(160, 160, 40, 30, seed=51),
+         sprand.banded(160, 160, 32, 28, seed=52)),
+    ]
+
+
+def _estimate(structure, flopr, *, safety=1.3, n_panels=0):
+    return admission.estimate(
+        len(structure), np.asarray(structure, dtype=np.float64),
+        np.asarray(flopr, dtype=np.float64), 2.0,
+        nnz_a=64, nnz_b=64, nrows_b=64, safety=safety, n_panels=n_panels)
+
+
+# --------------------------------------------------------------------------- #
+# monotonicity: bigger predicted work never prices cheaper
+# --------------------------------------------------------------------------- #
+@settings(max_examples=60)
+@given(st.lists(st.integers(0, 512), min_size=1, max_size=40),
+       st.integers(1, 16), st.integers(1, 8))
+def test_estimate_monotone_in_structure(raw, num, den):
+    """Scaling every predicted row count by a factor >= 1 never decreases
+    any byte/second field of the estimate."""
+    structure = [x / 8.0 for x in raw]
+    flopr = [4.0 * x + 8.0 for x in structure]   # FLOP bound stays above
+    scale = 1.0 + num / den
+    lo = _estimate(structure, flopr)
+    hi = _estimate([s * scale for s in structure],
+                   [f * scale for f in flopr])
+    assert hi.capacity_bytes >= lo.capacity_bytes
+    assert hi.total_bytes >= lo.total_bytes
+    assert hi.est_seconds >= lo.est_seconds
+
+
+@settings(max_examples=60)
+@given(st.lists(st.integers(0, 512), min_size=1, max_size=40),
+       st.integers(1, 16))
+def test_estimate_monotone_in_flopr(raw, bump):
+    """Raising only the per-row FLOP upper bound (structure fixed) never
+    decreases the estimate — the min(ceil(s*safety), flopr) slot rule can
+    only relax upward."""
+    structure = [x / 8.0 for x in raw]
+    flopr = [x / 2.0 for x in raw]               # sometimes BELOW structure
+    lo = _estimate(structure, flopr)
+    hi = _estimate(structure, [f + float(bump) for f in flopr])
+    assert hi.capacity_bytes >= lo.capacity_bytes
+    assert hi.total_bytes >= lo.total_bytes
+    assert hi.est_seconds >= lo.est_seconds
+
+
+@settings(max_examples=30)
+@given(st.lists(st.integers(0, 256), min_size=1, max_size=24),
+       st.integers(1, 4))
+def test_estimate_monotone_in_panels(raw, panels):
+    """More panels replicate per-panel buffers: the price never drops."""
+    structure = [x / 4.0 for x in raw]
+    flopr = [2.0 * x + 4.0 for x in structure]
+    lo = _estimate(structure, flopr, n_panels=0)
+    hi = _estimate(structure, flopr, n_panels=panels + 1)
+    assert hi.capacity_bytes >= lo.capacity_bytes
+    assert hi.total_bytes >= lo.total_bytes
+
+
+# --------------------------------------------------------------------------- #
+# upper bound: the formula dominates what the planner actually allocates
+# --------------------------------------------------------------------------- #
+PLAN_VARIANTS = [
+    ("plain", {}),
+    ("pop_quant", dict(pop_quant=True)),
+    ("panels", dict(n_panels=2)),
+]
+
+
+@pytest.mark.parametrize("fam,a,b", _families(),
+                         ids=[f[0] for f in _families()])
+@pytest.mark.parametrize("variant,pkw", PLAN_VARIANTS,
+                         ids=[v[0] for v in PLAN_VARIANTS])
+def test_formula_bounds_planned_capacity(fam, a, b, variant, pkw):
+    """The pure-formula estimate (no plan introspection) upper-bounds the
+    planner's exactly-allocated output bytes for a FRESH plan on every
+    suite family and plan shape."""
+    plan = plan_mod.plan_spgemm(a, b, **pkw)
+    est = admission.estimate(
+        plan.shape_a[0], plan.structure, plan.flopr,
+        plan.compression_ratio, nnz_a=plan.cap_a, nnz_b=plan.cap_b,
+        nrows_b=plan.shape_b[0], safety=plan.safety, n_panels=plan.n_panels)
+    actual = admission.planned_bytes(plan)
+    assert est.capacity_bytes >= actual, (
+        f"{fam}/{variant}: estimate {est.capacity_bytes} under-prices "
+        f"planned {actual}")
+    # and the service-side wrapper can only tighten upward
+    assert admission.estimate_cost(plan).capacity_bytes >= actual
+
+
+def test_estimate_cost_covers_template_growth():
+    """A template grown by a LATER family member inflates earlier members'
+    replanned capacities; estimate_cost must still dominate via the
+    planned-bytes max."""
+    reg = plan_mod.TemplateRegistry()
+    fams = _families()
+    small_a, small_b = fams[1][1], fams[1][2]
+    plan_mod.plan_spgemm(small_a, small_b, template="auto", registry=reg)
+    # a denser same-shape sibling grows the family template
+    big_a = sprand.power_law(300, 300, 9, 1.3, seed=91)
+    big_b = sprand.power_law(300, 300, 8, 1.4, seed=92)
+    plan_mod.plan_spgemm(big_a, big_b, template="auto", registry=reg)
+    replanned = plan_mod.plan_spgemm(small_a, small_b, template="auto",
+                                     registry=reg)
+    est = admission.estimate_cost(replanned)
+    assert est.capacity_bytes >= admission.planned_bytes(replanned)
+    assert est.total_bytes == est.capacity_bytes + est.operand_bytes
+
+
+# --------------------------------------------------------------------------- #
+# budget ledger
+# --------------------------------------------------------------------------- #
+def _flat_estimate(total_bytes: int) -> admission.CostEstimate:
+    return admission.CostEstimate(
+        flop=0, predicted_nnz=0.0, compression_ratio=1.0, operand_bytes=0,
+        capacity_bytes=total_bytes, total_bytes=total_bytes, est_seconds=0.0)
+
+
+def test_budget_reserve_release_round_trip():
+    budget = admission.MemoryBudget(1000)
+    est = _flat_estimate(400)
+    assert budget.fits_ever(est) and budget.fits_now(est)
+    budget.reserve(est)
+    budget.reserve(est)
+    assert budget.remaining == 200
+    assert not budget.fits_now(est)          # backpressure point
+    assert budget.fits_ever(est)             # ...but not a permanent reject
+    with pytest.raises(AdmissionRejectedError) as ei:
+        budget.reserve(est)
+    assert ei.value.context["reason"] == "budget"
+    budget.release(est)
+    budget.release(est)
+    assert budget.remaining == 1000
+    budget.release(est)                      # over-release clamps at zero
+    assert budget.reserved == 0
+
+
+def test_budget_fits_ever_rejects_impossible():
+    budget = admission.MemoryBudget(1000)
+    assert not budget.fits_ever(_flat_estimate(1001))
+    with pytest.raises(Exception):
+        admission.MemoryBudget(0)

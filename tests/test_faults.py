@@ -293,3 +293,52 @@ def test_faults_4dev_shard_containment():
     assert rec["capacity"]["rpt_eq"] and rec["capacity"]["col_eq"]
     assert rec["capacity"]["vdiff"] < 1e-4
     assert rec["capacity"]["ref_err"] < 1e-3
+
+
+# --------------------------------------------------------------------------- #
+# inject() re-entrancy: hooks restore no matter how the guarded block leaves
+# --------------------------------------------------------------------------- #
+def test_inject_unwinds_when_block_raises():
+    assert not faults.armed()
+    with pytest.raises(RuntimeError, match="boom"):
+        with faults.inject(capacity_scale=0.5):
+            assert faults.armed()
+            raise RuntimeError("boom")
+    assert not faults.armed()
+    assert faults.scale_capacity(100) == 100   # hook fully disarmed
+
+
+def test_inject_nested_raise_unwinds_in_order():
+    # inner block raises; the OUTER context must survive it armed, then
+    # disarm cleanly itself — no leak, no premature pop
+    with faults.inject(capacity_scale=0.5) as outer:
+        with pytest.raises(ValueError):
+            with faults.inject(capacity_scale=0.25):
+                raise ValueError("inner")
+        assert faults._STACK == [outer]
+        assert faults.scale_capacity(100) == 50   # outer still armed
+    assert not faults.armed()
+
+
+def test_inject_unwind_pops_by_identity_not_equality():
+    # two contexts with IDENTICAL kwargs: exiting the inner one must pop the
+    # inner FaultState instance, not an equal-looking outer sibling
+    with faults.inject(sketch_scale=0.5, seed=7) as outer:
+        with faults.inject(sketch_scale=0.5, seed=7) as inner:
+            assert faults._STACK == [outer, inner]
+        assert len(faults._STACK) == 1
+        assert faults._STACK[0] is outer
+    assert not faults.armed()
+
+
+def test_inject_tolerates_stack_perturbation():
+    # a guarded block that itself perturbs the stack (opens a context and
+    # leaks past the outer exit) must not break the outer unwind
+    rogue = faults.inject(gather_scale=0.5)
+    with faults.inject(capacity_scale=0.5):
+        rogue.__enter__()                       # now above us on the stack
+    # outer removed ITSELF (by identity); the rogue state survives alone
+    assert len(faults._STACK) == 1
+    assert faults.scale_capacity(100) == 100    # outer truly gone
+    rogue.__exit__(None, None, None)
+    assert not faults.armed()

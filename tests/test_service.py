@@ -1,0 +1,458 @@
+"""SpGEMM service scheduler suite (DESIGN.md §10).
+
+The contract under test: every submitted request reaches a terminal state
+with either a bitwise-correct result (vs an ample-capacity reference on
+the same sampled rows) or a typed :mod:`repro.core.errors` error — under
+no-fault traffic AND under the full chaos matrix (all five
+:mod:`repro.core.faults` classes) — and the queue always drains.  The
+no-fault steady state is compile-count pinned: repeat templates add ZERO
+executor retraces.
+"""
+import numpy as np
+import pytest
+
+from repro.core import faults, plan as plan_mod, spgemm
+from repro.core.errors import (AdmissionRejectedError, CapacityExhaustedError,
+                               DeadlineExceededError, OperandValidationError,
+                               ShardFailureError, SpgemmError)
+from repro.serve.spgemm_service import (CircuitBreaker, Request, RequestState,
+                                        ServiceConfig, SpgemmService)
+from repro.sparse import random as sprand
+from repro.sparse.formats import CSR, spgemm_dense_oracle
+
+
+import jax
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_executables():
+    """This module compiles many short-lived service executors (chaos
+    retraces, per-config caches).  Drop them from jax's global caches on
+    the way out so a long single-process suite run doesn't accumulate
+    native compiler state across modules."""
+    yield
+    jax.clear_caches()
+
+
+def _families():
+    return [
+        ("er", sprand.erdos_renyi(250, 250, 4, seed=25),
+         sprand.erdos_renyi(250, 250, 3, seed=26)),
+        ("pl", sprand.power_law(300, 300, 5, 1.5, seed=21),
+         sprand.power_law(300, 300, 4, 1.6, seed=22)),
+        ("rmat", sprand.rmat(250, 250, 1250, seed=31),
+         sprand.rmat(250, 250, 1000, seed=32)),
+        ("band", sprand.banded(250, 250, 10, 14, seed=23),
+         sprand.banded(250, 250, 8, 12, seed=24)),
+        ("fem", sprand.banded(160, 160, 40, 30, seed=51),
+         sprand.banded(160, 160, 32, 28, seed=52)),
+    ]
+
+
+def _reference(p, a, b):
+    """Ample-capacity binned run on the same sample rows — the bitwise
+    ground truth a served result must match."""
+    pa = plan_mod.plan_spgemm(a, b, safety=64.0, sample_rows=p.sample_rows)
+    oa = spgemm.spgemm_binned(pa.to_device(a, "a"), pa.to_device(b, "b"),
+                              pa.binning, alloc=pa.alloc)
+    assert int(oa.overflow) == 0, "reference must not overflow"
+    return plan_mod.reassemble(pa, oa)
+
+
+def _assert_bitwise(req, a, b):
+    c, ca = req.result, _reference(req.plan, a, b)
+    np.testing.assert_array_equal(c.rpt, ca.rpt)
+    np.testing.assert_array_equal(c.col, ca.col)
+    np.testing.assert_allclose(c.val, ca.val, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(c.to_dense(), spgemm_dense_oracle(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+class FakeClock:
+    """Deterministic service clock: deadline behavior becomes a pure
+    function of explicit ``advance`` calls."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _nan_matrix() -> CSR:
+    m = sprand.erdos_renyi(50, 50, 3, seed=7)
+    val = m.val.copy()
+    val[len(val) // 2] = np.nan
+    return CSR(rpt=m.rpt, col=m.col, val=val, shape=m.shape)
+
+
+# --------------------------------------------------------------------------- #
+# lifecycle
+# --------------------------------------------------------------------------- #
+def test_clean_request_lifecycle_and_history():
+    _, a, b = _families()[0]
+    svc = SpgemmService()
+    req = svc.submit(a, b)
+    assert req.state == RequestState.ADMITTED
+    assert not req.done
+    svc.drain()
+    assert req.state == RequestState.DONE
+    assert [s for s, _ in req.history] == [
+        RequestState.SUBMITTED, RequestState.ADMITTED, RequestState.PLANNED,
+        RequestState.EXECUTING, RequestState.DONE]
+    assert req.latency is not None and req.latency >= 0
+    assert req.stats["degradations"] == [] and req.stats["retries"] == 0
+    assert req.stats["estimate"]["total_bytes"] > 0
+    _assert_bitwise(req, a, b)
+    assert req.result_or_raise() is req.result
+
+
+def test_every_terminal_state_carries_result_xor_typed_error():
+    _, a, b = _families()[0]
+    svc = SpgemmService(ServiceConfig(queue_capacity=1))
+    ok = svc.submit(a, b)
+    shed = svc.submit(a, b)                     # queue_capacity=1 → shed
+    bad = svc.submit(_nan_matrix(), _nan_matrix())
+    svc.drain()
+    assert ok.result is not None and ok.error is None
+    for r in (shed, bad):
+        assert r.result is None and isinstance(r.error, SpgemmError)
+        with pytest.raises(SpgemmError):
+            r.result_or_raise()
+    assert isinstance(shed.error, AdmissionRejectedError)
+    assert shed.error.context["reason"] == "queue_full"
+    assert isinstance(bad.error, OperandValidationError)
+    assert bad.state == RequestState.FAILED
+
+
+def test_result_or_raise_rejects_non_terminal():
+    _, a, b = _families()[0]
+    svc = SpgemmService()
+    req = svc.submit(a, b)
+    with pytest.raises(SpgemmError, match="not terminal"):
+        req.result_or_raise()
+    svc.drain()
+
+
+# --------------------------------------------------------------------------- #
+# batching + zero-retrace steady state
+# --------------------------------------------------------------------------- #
+def test_same_template_requests_batch_one_wave():
+    _, a, b = _families()[0]
+    svc = SpgemmService(ServiceConfig(max_batch=8))
+    reqs = [svc.submit(a, b) for _ in range(5)]
+    done = svc.step()
+    assert len(done) == 5                       # one wave served the batch
+    assert svc.stats()["waves"] == 1
+    assert all(r.state == RequestState.DONE for r in reqs)
+
+
+def test_repeat_templates_add_zero_retraces():
+    fams = _families()
+    svc = SpgemmService()
+    for _, a, b in fams:
+        svc.submit(a, b)
+    svc.drain()
+    traces = svc.stats()["plan_cache"]["traces"]
+    reqs = [svc.submit(a, b) for _, a, b in fams for _ in range(3)]
+    svc.drain()
+    assert svc.stats()["plan_cache"]["traces"] == traces, \
+        "steady-state repeat traffic must not retrace"
+    assert all(r.state == RequestState.DONE for r in reqs)
+
+
+def test_mixed_shapes_do_not_cross_batch():
+    fams = _families()
+    svc = SpgemmService(ServiceConfig(max_batch=8))
+    a0, b0 = fams[0][1], fams[0][2]
+    a4, b4 = fams[4][1], fams[4][2]
+    order = [svc.submit(a0, b0), svc.submit(a4, b4), svc.submit(a0, b0)]
+    done = svc.step()
+    # wave 1: both er requests batch; the fem request keeps its queue slot
+    assert {r.id for r in done} == {order[0].id, order[2].id}
+    assert order[1].state == RequestState.ADMITTED
+    svc.drain()
+    assert order[1].state == RequestState.DONE
+
+
+# --------------------------------------------------------------------------- #
+# shedding, deadlines, budget
+# --------------------------------------------------------------------------- #
+def test_queue_full_sheds_with_typed_error():
+    _, a, b = _families()[0]
+    svc = SpgemmService(ServiceConfig(queue_capacity=2))
+    kept = [svc.submit(a, b) for _ in range(2)]
+    shed = [svc.submit(a, b) for _ in range(3)]
+    assert all(r.state == RequestState.SHED for r in shed)
+    assert all(r.error.context["observed"] == 2 for r in shed)
+    assert svc.stats()["queue"]["shed"] == 3
+    svc.drain()
+    assert all(r.state == RequestState.DONE for r in kept)
+
+
+def test_deadline_expires_while_queued():
+    _, a, b = _families()[0]
+    clk = FakeClock()
+    svc = SpgemmService(ServiceConfig(), clock=clk)
+    urgent = svc.submit(a, b, deadline=5.0)
+    patient = svc.submit(a, b)
+    clk.advance(10.0)
+    done = svc.drain()
+    assert urgent.state == RequestState.EXPIRED
+    assert isinstance(urgent.error, DeadlineExceededError)
+    assert urgent.error.context["deadline"] == 5.0
+    assert urgent.error.context["observed"] >= 10.0
+    assert patient.state == RequestState.DONE
+    assert {r.id for r in done} == {urgent.id, patient.id}
+    assert svc.stats()["queue"]["expired"] == 1
+
+
+def test_default_deadline_applies():
+    _, a, b = _families()[0]
+    clk = FakeClock()
+    svc = SpgemmService(ServiceConfig(default_deadline=3.0), clock=clk)
+    req = svc.submit(a, b)
+    clk.advance(4.0)
+    svc.drain()
+    assert req.state == RequestState.EXPIRED
+
+
+def test_budget_backpressure_serializes_waves():
+    """A budget that fits ~one request at a time still drains everything —
+    non-fitting batch mates simply stay queued (backpressure), they are
+    never shed or failed."""
+    _, a, b = _families()[0]
+    probe = SpgemmService()
+    r = probe.submit(a, b)
+    probe.drain()
+    one = r.estimate.total_bytes
+    svc = SpgemmService(ServiceConfig(device_budget_bytes=int(one * 1.5),
+                                      max_batch=8))
+    reqs = [svc.submit(a, b) for _ in range(4)]
+    svc.drain()
+    assert all(r.state == RequestState.DONE for r in reqs)
+    st = svc.stats()
+    assert st["waves"] == 4, "budget must force one-request waves"
+    assert st["queue"]["shed"] == 0 and st["terminal"]["FAILED"] == 0
+
+
+def test_over_budget_request_fails_typed():
+    _, a, b = _families()[0]
+    svc = SpgemmService(ServiceConfig(device_budget_bytes=4096))
+    req = svc.submit(a, b)
+    svc.drain()
+    assert req.state == RequestState.FAILED
+    assert isinstance(req.error, AdmissionRejectedError)
+    assert req.error.context["reason"] == "over_budget"
+    assert req.error.context["observed"] > req.error.context["planned"]
+
+
+# --------------------------------------------------------------------------- #
+# capacity exhaustion → requeue once at escalated policy
+# --------------------------------------------------------------------------- #
+def test_capacity_exhausted_requeues_once_then_degrades():
+    _, a, b = _families()[1]                    # power-law: starvation bites
+    svc = SpgemmService(ServiceConfig(
+        retry_policy=plan_mod.RetryPolicy(rounds=0, exact_fallback=False,
+                                          on_exhausted="raise"),
+        # no ladder on the retry either: recovery must come from the exact
+        # symbolic fallback, which lands in the degradation ledger
+        escalated_policy=plan_mod.RetryPolicy(rounds=0, exact_fallback=True,
+                                              on_exhausted="raise")))
+    req = svc.submit(a, b)
+    with faults.inject(capacity_scale=0.1):
+        svc.drain()
+    assert req.attempts == 1
+    assert svc.stats()["requeues"] == 1
+    assert req.state == RequestState.DEGRADED, \
+        "escalated retry (exact fallback) must recover the request"
+    assert req.stats["degradations"], "degradation ledger must be attached"
+    assert "first_error" in req.stats
+    _assert_bitwise(req, a, b)
+
+
+def test_capacity_exhausted_twice_fails_typed():
+    """Both the base AND escalated policies denied recovery → the request
+    fails typed after exactly one requeue, never loops."""
+    _, a, b = _families()[1]
+    hard = plan_mod.RetryPolicy(rounds=0, exact_fallback=False,
+                                on_exhausted="raise")
+    svc = SpgemmService(ServiceConfig(retry_policy=hard,
+                                      escalated_policy=hard))
+    req = svc.submit(a, b)
+    with faults.inject(capacity_scale=0.05):
+        svc.drain()
+    assert req.state == RequestState.FAILED
+    assert isinstance(req.error, CapacityExhaustedError)
+    assert req.attempts == 1
+
+
+# --------------------------------------------------------------------------- #
+# circuit breaker
+# --------------------------------------------------------------------------- #
+def test_breaker_opens_after_consecutive_failures_then_recovers():
+    _, a, b = _families()[0]
+    clk = FakeClock()
+    svc = SpgemmService(ServiceConfig(max_batch=1, breaker_threshold=2,
+                                      breaker_cooldown=10.0), clock=clk)
+    # two waves, each with its own armed executor fault → 2 consecutive
+    # ShardFailureErrors on the same template's breaker
+    failed = []
+    for _ in range(2):
+        failed.append(svc.submit(a, b))
+        with faults.inject(fail_executor={"unit": "local"}):
+            svc.step()
+    assert all(r.state == RequestState.FAILED for r in failed)
+    assert all(isinstance(r.error, ShardFailureError) for r in failed)
+    assert svc.stats()["breakers"] == [
+        dict(state="open", failures=2, trips=1)]
+
+    # breaker open → next request fails FAST with the cause chained
+    fast = svc.submit(a, b)
+    svc.step()
+    assert fast.state == RequestState.FAILED
+    assert isinstance(fast.error, AdmissionRejectedError)
+    assert fast.error.context["reason"] == "circuit_open"
+    assert isinstance(fast.error.__cause__, ShardFailureError)
+
+    # cooldown elapses → HALF_OPEN probe succeeds → breaker closes
+    clk.advance(11.0)
+    probe = svc.submit(a, b)
+    svc.step()
+    assert probe.state == RequestState.DONE
+    assert svc.stats()["breakers"] == [
+        dict(state="closed", failures=0, trips=1)]
+    after = svc.submit(a, b)
+    svc.step()
+    assert after.state == RequestState.DONE
+
+
+def test_half_open_probe_failure_reopens():
+    clk = FakeClock()
+    br = CircuitBreaker(threshold=1, cooldown=5.0)
+    br.record_failure(clk(), ShardFailureError("x"))
+    assert br.state == CircuitBreaker.OPEN and not br.allow(clk())
+    clk.advance(6.0)
+    assert br.allow(clk()) and br.state == CircuitBreaker.HALF_OPEN
+    br.record_failure(clk(), ShardFailureError("y"))
+    assert br.state == CircuitBreaker.OPEN and br.trips == 2
+
+
+def test_breaker_isolation_across_templates():
+    """One family's dying executor must not reject another family's
+    traffic: breakers are per-template."""
+    fams = _families()
+    a0, b0 = fams[0][1], fams[0][2]
+    a4, b4 = fams[4][1], fams[4][2]
+    svc = SpgemmService(ServiceConfig(max_batch=1, breaker_threshold=1))
+    dead = svc.submit(a0, b0)
+    with faults.inject(fail_executor={"unit": "local"}):
+        svc.step()
+    assert dead.state == RequestState.FAILED
+    other = svc.submit(a4, b4)
+    svc.drain()
+    assert other.state == RequestState.DONE
+    states = {b["state"] for b in svc.stats()["breakers"]}
+    assert states == {"open", "closed"}
+
+
+# --------------------------------------------------------------------------- #
+# chaos soak: all five fault classes through the full service loop
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_chaos_soak_all_faults_terminate_typed_or_bitwise():
+    """≥200 mixed-family requests, waves alternating through every fault
+    class (capacity starvation, sketch corruption, gather starvation,
+    executor failure, malformed operand).  EVERY request must reach a
+    terminal state with a bitwise-correct result or a typed error; the
+    queue must fully drain; and after the chaos, repeat no-fault traffic
+    must add zero retraces."""
+    fams = _families()
+    svc = SpgemmService(ServiceConfig(queue_capacity=256, max_batch=4,
+                                      breaker_threshold=3,
+                                      breaker_cooldown=0.0))
+    panel_svc = SpgemmService(ServiceConfig(queue_capacity=64, n_panels=2))
+    refs: dict = {}
+
+    def check(req, a, b):
+        assert req.done, f"request {req.id} not terminal: {req.state}"
+        if req.error is not None:
+            assert isinstance(req.error, SpgemmError), \
+                f"untyped error {type(req.error).__name__}"
+            return
+        key = id(a), id(b)
+        if key not in refs:
+            refs[key] = _reference(req.plan, a, b)
+        ca = refs[key]
+        np.testing.assert_array_equal(req.result.rpt, ca.rpt)
+        np.testing.assert_array_equal(req.result.col, ca.col)
+        np.testing.assert_allclose(req.result.val, ca.val,
+                                   rtol=1e-5, atol=1e-5)
+
+    waves = [
+        dict(capacity_scale=0.2),
+        dict(sketch_scale=0.05),
+        dict(fail_executor={"unit": "local"}),
+        dict(capacity_scale=0.3, sketch_scale=0.5),   # composed
+        None,                                         # no-fault control
+    ]
+    submitted = 0
+    nan_a = _nan_matrix()
+    for round_i in range(8):
+        batch = []
+        for fam_i, (_, a, b) in enumerate(fams):
+            for _ in range(5):                  # copies batch per template
+                req = svc.submit(a, b)
+                batch.append((req, a, b))
+                submitted += 1
+        # a malformed operand rides every round (fault class 5); it must be
+        # contained at the front door without touching the queue
+        bad = svc.submit(nan_a, nan_a)
+        submitted += 1
+        assert bad.state == RequestState.FAILED
+        assert isinstance(bad.error, OperandValidationError)
+        fault = waves[round_i % len(waves)]
+        if fault is None:
+            svc.drain()
+        else:
+            with faults.inject(seed=round_i, **fault):
+                svc.drain()
+        assert not faults.armed(), "fault context leaked past the wave"
+        for req, a, b in batch:
+            check(req, a, b)
+
+    # gather starvation needs a panel plan: dedicated service, same contract
+    for round_i in range(2):
+        batch = [(panel_svc.submit(a, b), a, b)
+                 for _, a, b in fams for _ in range(2)]
+        submitted += len(batch)
+        with faults.inject(gather_scale=0.25, seed=round_i):
+            panel_svc.drain()
+        for req, a, b in batch:
+            assert req.done
+            if req.error is not None:
+                assert isinstance(req.error, SpgemmError)
+            else:
+                np.testing.assert_allclose(
+                    req.result.to_dense(), spgemm_dense_oracle(a, b),
+                    rtol=1e-4, atol=1e-4)
+
+    assert submitted >= 200, f"soak too small: {submitted}"
+    for s in (svc, panel_svc):
+        st = s.stats()
+        assert st["queue"]["depth"] == 0, "queue must drain"
+        assert st["in_flight"] == 0, "every request must be terminal"
+
+    # steady state after the storm: repeat templates retrace NOTHING
+    for _, a, b in fams:
+        svc.submit(a, b)
+    svc.drain()
+    traces = svc.stats()["plan_cache"]["traces"]
+    post = [svc.submit(a, b) for _, a, b in fams for _ in range(2)]
+    svc.drain()
+    assert svc.stats()["plan_cache"]["traces"] == traces, \
+        "post-chaos repeat traffic must add zero retraces"
+    assert all(r.state == RequestState.DONE for r in post)
